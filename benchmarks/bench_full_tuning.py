@@ -1,0 +1,34 @@
+"""Paper Fig. 1: full auto-scheduling speedup and search time per model.
+
+For each of the 10 archs: untuned model seconds, full-budget tuned speedup
+("maximum speedup"), and the virtual search time the tuner spent — the
+upfront cost transfer-tuning attacks.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.configs import ARCH_IDS
+
+
+def run() -> list[tuple]:
+    rows = []
+    payload = {}
+    for arch in ARCH_IDS:
+        d = common.tune_arch_cached(arch)
+        speedup = d["untuned_seconds"] / d["tuned_seconds"]
+        rows.append((
+            f"fig1/{arch}",
+            round(d["tuned_seconds"] * 1e6, 2),
+            f"max_speedup={speedup:.2f}x search_time={d['search_time_s']:.0f}s"
+            f" trials={d['trials']}",
+        ))
+        payload[arch] = {"untuned_s": d["untuned_seconds"],
+                         "tuned_s": d["tuned_seconds"],
+                         "max_speedup": speedup,
+                         "search_time_s": d["search_time_s"]}
+    common.save_result("fig1_full_tuning", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "Fig.1 — full auto-scheduling per model")

@@ -1,0 +1,87 @@
+"""Paper Fig. 5 + Table 4 — the headline comparison.
+
+Per architecture:
+  * transfer-tuning speedup (donor = Eq. 1 heuristic) and its search time;
+  * Ansor's speedup *given the same search time* (Fig. 5a);
+  * the search time Ansor needs to *match* transfer-tuning (Fig. 5b);
+  * TT's fraction of the full-budget maximum speedup and of the full search
+    time (Table 4).
+
+Both Ansor curves come from the cached full-budget search trace, so the
+comparison uses one tuning run per arch.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.configs import ARCH_IDS
+from repro.core.tuner import transfer_arch
+
+
+def run() -> list[tuple]:
+    db = common.full_db()
+    rows = []
+    payload = {}
+    agg = {"pct_max": [], "pct_time": [], "match_ratio": []}
+    for arch in ARCH_IDS:
+        d = common.tune_arch_cached(arch)
+        tt = transfer_arch(db, arch, common.SHAPE, dp=common.DP, tp=common.TP,
+                           donors="auto", seed=common.SEED)
+        max_speedup = d["untuned_seconds"] / d["tuned_seconds"]
+        ansor_same_time = common.speedup_at_time(d, tt.search_time_s)
+        match_t = common.time_to_reach(d, tt.tuned_seconds)
+        match_ratio = (match_t / tt.search_time_s) if (match_t and tt.search_time_s > 0) else None
+        pct_max = (tt.speedup - 1) / max(max_speedup - 1, 1e-9) * 100
+        pct_time = tt.search_time_s / max(d["search_time_s"], 1e-9) * 100
+        donor = tt.kernels and next((k.chosen_from for k in tt.kernels if k.chosen_from), "-")
+        rows.append((
+            f"headline/{arch}",
+            round(tt.tuned_seconds * 1e6, 1),
+            f"tt_speedup={tt.speedup:.2f}x ansor_same_time={ansor_same_time:.2f}x "
+            f"ansor_match={'%.1fx_more_time' % match_ratio if match_ratio else 'never'} "
+            f"pct_of_max={pct_max:.1f}% pct_of_search_time={pct_time:.2f}% donor={donor}",
+        ))
+        payload[arch] = {
+            "tt_speedup": tt.speedup, "tt_search_s": tt.search_time_s,
+            "tt_coverage": tt.coverage(), "donor": donor,
+            "max_speedup": max_speedup, "ansor_same_time": ansor_same_time,
+            "ansor_match_time_s": match_t, "match_ratio": match_ratio,
+            "pct_of_max_speedup": pct_max, "pct_of_search_time": pct_time,
+        }
+        agg["pct_max"].append(pct_max)
+        agg["pct_time"].append(pct_time)
+        if match_ratio:
+            agg["match_ratio"].append(match_ratio)
+    mean = lambda xs: sum(xs) / max(len(xs), 1)
+    rows.append(("headline/MEAN", 0,
+                 f"pct_of_max={mean(agg['pct_max']):.1f}% "
+                 f"pct_of_search_time={mean(agg['pct_time']):.2f}% "
+                 f"ansor_needs={mean(agg['match_ratio']):.1f}x_more_time "
+                 f"(paper: 49.12%, 2.08%, 6.5x)"))
+    payload["mean"] = {k: mean(v) for k, v in agg.items()}
+
+    # Beyond-paper: compatibility-aware donor selection (heuristic v2 —
+    # the paper's §4.4.2 future-work direction).
+    v2_pct, v2_pct_capped = [], []
+    for arch in ARCH_IDS:
+        d = common.tune_arch_cached(arch)
+        max_speedup = d["untuned_seconds"] / d["tuned_seconds"]
+        tt2 = transfer_arch(db, arch, common.SHAPE, dp=common.DP, tp=common.TP,
+                            donors="auto2", seed=common.SEED)
+        pct = (tt2.speedup - 1) / max(max_speedup - 1, 1e-9) * 100
+        v2_pct.append(pct)
+        v2_pct_capped.append(min(pct, 100.0))
+        payload[arch]["v2_speedup"] = tt2.speedup
+        payload[arch]["v2_pct_of_max"] = pct
+        rows.append((f"headline_v2/{arch}", round(tt2.tuned_seconds * 1e6, 1),
+                     f"tt2_speedup={tt2.speedup:.2f}x pct_of_max={pct:.1f}%"))
+    rows.append(("headline_v2/MEAN", 0,
+                 f"pct_of_max={mean(v2_pct):.1f}% (capped@100: {mean(v2_pct_capped):.1f}%) "
+                 f"vs Eq.1 {mean(agg['pct_max']):.1f}% — compat-aware donor selection"))
+    payload["mean"]["v2_pct_max"] = mean(v2_pct)
+    payload["mean"]["v2_pct_max_capped"] = mean(v2_pct_capped)
+    common.save_result("headline", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "Fig.5 / Table 4 — transfer-tuning vs Ansor")

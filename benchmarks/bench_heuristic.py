@@ -1,0 +1,48 @@
+"""Paper Tables 2 & 3: kernel-class census and donor heuristic top-3.
+
+Table 2 analogue: per arch, the kernel classes with counts and untuned-time
+shares, plus the heuristic's chosen donor.  Table 3 analogue: TT speedup for
+the heuristic's top-3 donor choices (expect decreasing with rank).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.configs import ARCH_IDS
+from repro.core.cost_model import class_proportions
+from repro.core.tuner import arch_uses, donor_ranking, transfer_arch
+
+
+def run() -> list[tuple]:
+    db = common.full_db()
+    rows = []
+    payload = {}
+    rank_hits = []
+    for arch in ARCH_IDS:
+        uses = arch_uses(arch, common.SHAPE, dp=common.DP, tp=common.TP)
+        props = class_proportions(uses)
+        top_classes = ", ".join(
+            f"{c}:{p:.0%}" for c, p in sorted(props.items(), key=lambda kv: -kv[1])[:3])
+        ranked = donor_ranking(db, arch, common.SHAPE, dp=common.DP, tp=common.TP, k=3)
+        choices = []
+        for i, ds in enumerate(ranked):
+            tt = transfer_arch(db, arch, common.SHAPE, dp=common.DP, tp=common.TP,
+                               donors=[ds.model_id], seed=common.SEED)
+            choices.append({"donor": ds.model_id, "score": ds.score,
+                            "speedup": tt.speedup})
+        speeds = [c["speedup"] for c in choices]
+        rank_hits.append(1.0 if speeds and speeds[0] == max(speeds) else 0.0)
+        rows.append((
+            f"table3/{arch}",
+            round(len(uses), 0),
+            " ".join(f"choice{i + 1}={c['donor']}({c['speedup']:.2f}x)"
+                     for i, c in enumerate(choices)) + f" classes=[{top_classes}]",
+        ))
+        payload[arch] = {"classes": props, "choices": choices}
+    rows.append(("table3/rank1_best_fraction", round(100 * sum(rank_hits) / len(rank_hits), 1),
+                 "how often the heuristic's first choice gives the best speedup"))
+    common.save_result("table3_heuristic", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "Tables 2/3 — donor selection heuristic")

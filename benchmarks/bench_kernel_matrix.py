@@ -1,0 +1,52 @@
+"""Paper Fig. 4: per-kernel transfer matrix.
+
+Every kernel of the target arch evaluated with every compatible donor
+schedule; invalid transfers (the paper's -1 bars) reported as such.
+Target: mixtral-8x22b from its heuristic donor dbrx-132b — the same-family
+pair (both d_model=6144 MoE), the ResNet18-from-ResNet50 analogue.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.cost_model import kernel_seconds
+from repro.core.heuristic import select_donor
+from repro.core.transfer import transfer_matrix
+from repro.core.tuner import arch_uses
+
+TARGET = "mixtral-8x22b"
+
+
+def run() -> list[tuple]:
+    db = common.full_db()
+    uses = arch_uses(TARGET, common.SHAPE, dp=common.DP, tp=common.TP)
+    donor = select_donor(uses, db, exclude=(TARGET,))
+    mat = transfer_matrix(uses, db, donors=[donor])
+    rows = []
+    payload = {"target": TARGET, "donor": donor, "cells": {}}
+    total = valid = 0
+    for u in uses:
+        row = mat[u.instance.workload_key()]
+        untuned = kernel_seconds(u.instance)
+        best = min((s for s in row.values() if s is not None), default=None)
+        n_inv = sum(1 for s in row.values() if s is None)
+        total += len(row)
+        valid += len(row) - n_inv
+        rows.append((
+            f"fig4/{u.tag}",
+            round((best if best is not None else untuned) * 1e6, 3),
+            f"class={u.instance.class_id} donors={len(row)} invalid={n_inv}"
+            f" best_speedup={untuned / best if best else 1.0:.2f}x",
+        ))
+        payload["cells"][u.tag] = {
+            "class": u.instance.class_id, "untuned_s": untuned,
+            "schedules": {k: v for k, v in row.items()},
+        }
+    payload["valid_fraction"] = valid / max(total, 1)
+    common.save_result("fig4_kernel_matrix", payload)
+    rows.append(("fig4/valid_fraction", round(100 * valid / max(total, 1), 1),
+                 f"{valid}/{total} transfers produced valid code"))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "Fig.4 — per-kernel transfer matrix")

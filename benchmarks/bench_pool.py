@@ -1,0 +1,59 @@
+"""Paper Fig. 8 / §5.5: one-to-one vs mixed schedule pool.
+
+Standalone ranking picks the fastest schedule per kernel; the contextual
+model (inter-kernel cache-residency coupling, cost_model.contextual_model_
+seconds) then evaluates the *full-program* time of those choices.  The
+paper's observation: a bigger pool always helps standalone, but can REGRESS
+in context — reproduced here as (one2one vs mixed) × (standalone vs
+contextual) for all 10 archs.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.configs import ARCH_IDS
+from repro.core.cost_model import contextual_model_seconds
+from repro.core.tuner import arch_uses, transfer_arch
+
+
+def run() -> list[tuple]:
+    db = common.full_db()
+    rows = []
+    payload = {}
+    regressions = 0
+    for arch in ARCH_IDS:
+        uses = arch_uses(arch, common.SHAPE, dp=common.DP, tp=common.TP)
+        one = transfer_arch(db, arch, common.SHAPE, dp=common.DP, tp=common.TP,
+                            donors="auto", seed=common.SEED)
+        pool = [m for m in db.models() if m != arch]  # paper §5.5: every
+        # OTHER tuned model's schedules (self-schedules would be exact hits)
+        mixed = transfer_arch(db, arch, common.SHAPE, dp=common.DP, tp=common.TP,
+                              donors=pool, seed=common.SEED)
+        ctx_untuned = contextual_model_seconds(uses, None)
+        ctx_one = contextual_model_seconds(uses, one.schedule_map())
+        ctx_mixed = contextual_model_seconds(uses, mixed.schedule_map())
+        reg = ctx_mixed > ctx_one * 1.0005
+        regressions += bool(reg)
+        rows.append((
+            f"fig8/{arch}",
+            round(mixed.tuned_seconds * 1e6, 1),
+            f"one2one={one.speedup:.2f}x mixed={mixed.speedup:.2f}x "
+            f"ctx_one2one={ctx_untuned / ctx_one:.2f}x ctx_mixed={ctx_untuned / ctx_mixed:.2f}x "
+            f"search_ratio={mixed.search_time_s / max(one.search_time_s, 1e-9):.1f}x "
+            f"context_regression={'YES' if reg else 'no'}",
+        ))
+        payload[arch] = {
+            "one2one_speedup": one.speedup, "mixed_speedup": mixed.speedup,
+            "ctx_one2one_speedup": ctx_untuned / ctx_one,
+            "ctx_mixed_speedup": ctx_untuned / ctx_mixed,
+            "search_one_s": one.search_time_s, "search_mixed_s": mixed.search_time_s,
+            "context_regression": bool(reg),
+        }
+    rows.append(("fig8/context_regressions", regressions,
+                 f"archs where the mixed pool regressed in context "
+                 f"(paper: 7 of 11 standalone-picked regress)"))
+    common.save_result("fig8_pool", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "Fig.8 — mixed pool vs one-to-one")

@@ -1,0 +1,74 @@
+"""Paper §4.3, literal reproduction: tune ResNet50, transfer to ResNet18.
+
+The paper's own experiment on the paper's own models (TPU-adapted as
+implicit-GEMM kernel classes, core/cnn_workloads.py): per-kernel transfer
+matrix (Fig. 4), full-model speedup vs Ansor given the same search time
+(Fig. 5a leftmost bars: paper 1.2× vs 1.01×), and Ansor's time-to-match
+(paper: 4.8×).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.autoscheduler import tune_model
+from repro.core.cnn_workloads import cnn_uses
+from repro.core.cost_model import kernel_seconds
+from repro.core.database import ScheduleDB
+from repro.core.heuristic import donor_scores
+from repro.core.transfer import transfer_tune
+
+TRIALS = 1024
+
+
+def run() -> list[tuple]:
+    rows = []
+    db = ScheduleDB()
+    donors = {}
+    for donor in ("resnet50", "vgg16", "alexnet"):
+        res = tune_model(cnn_uses(donor), model_id=donor, total_trials=TRIALS,
+                         seed=common.SEED)
+        for r in res.records:
+            db.add(r)
+        donors[donor] = res
+        rows.append((f"resnet/tune_{donor}", round(res.tuned_seconds * 1e6, 1),
+                     f"max_speedup={res.speedup:.2f}x search={res.search_time_s:.0f}s"))
+
+    uses = cnn_uses("resnet18")
+    ranked = donor_scores(uses, db)
+    rows.append(("resnet/heuristic", 0,
+                 " ".join(f"{d.model_id}={d.score:.3f}" for d in ranked)))
+
+    tt = transfer_tune(uses, db, model_id="resnet18", donors=["resnet50"],
+                       seed=common.SEED)
+    res18 = tune_model(uses, model_id="resnet18", total_trials=TRIALS,
+                       seed=common.SEED)
+    # Ansor at the same (virtual) search time / time-to-match, from the trace
+    same = res18.untuned_seconds
+    for p in res18.trace:
+        if p.search_time_s <= tt.search_time_s:
+            same = min(same, p.best_seconds)
+    match_t = next((p.search_time_s for p in res18.trace
+                    if p.best_seconds <= tt.tuned_seconds), None)
+
+    n_valid = sum(1 for k in tt.kernels if k.chosen is not None)
+    n_inval = sum(k.invalid for k in tt.kernels)
+    rows.append((
+        "resnet/18_from_50",
+        round(tt.tuned_seconds * 1e6, 1),
+        f"tt_speedup={tt.speedup:.2f}x (paper 1.2x) "
+        f"ansor_same_time={res18.untuned_seconds / same:.2f}x (paper 1.01x) "
+        f"ansor_match={'%.1fx_more_time' % (match_t / tt.search_time_s) if match_t else 'never'}"
+        f" (paper 4.8x) covered={n_valid}/{len(tt.kernels)} invalid_cands={n_inval}",
+    ))
+    common.save_result("resnet", {
+        "tt_speedup": tt.speedup,
+        "search_time_s": tt.search_time_s,
+        "ansor_same_time": res18.untuned_seconds / same,
+        "ansor_match_ratio": (match_t / tt.search_time_s) if match_t else None,
+        "max_speedup_18": res18.speedup,
+        "covered": n_valid, "kernels": len(tt.kernels), "invalid": n_inval,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "§4.3 — ResNet18 from ResNet50 (the paper's own models)")

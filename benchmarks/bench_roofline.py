@@ -1,0 +1,62 @@
+"""Roofline report: read the dry-run artifacts and emit the per-cell table
+(EXPERIMENTS.md §Roofline).  Single-pod mesh per the assignment; multi-pod
+cells are summarized separately as the pod-axis sharding proof."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+from repro.hw.specs import TPU_V5E
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    cells = []
+    if not os.path.isdir(common.DRYRUN_DIR):
+        return cells
+    for name in sorted(os.listdir(common.DRYRUN_DIR)):
+        if not name.endswith(f"__{mesh}.json"):
+            continue
+        with open(os.path.join(common.DRYRUN_DIR, name)) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> list[tuple]:
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        ok = skipped = failed = 0
+        for cell in load_cells(mesh):
+            if cell["status"] == "skipped":
+                skipped += 1
+                continue
+            if cell["status"] != "ok":
+                failed += 1
+                continue
+            ok += 1
+            if mesh != "16x16":
+                continue  # the roofline table is single-pod per the brief
+            r = cell["roofline"]
+            dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            total = r["compute_s"] + 0  # terms are independent bounds
+            step_bound = dom_s
+            frac = {
+                "compute": r["compute_s"] / max(step_bound, 1e-30),
+                "memory": r["memory_s"] / max(step_bound, 1e-30),
+                "collective": r["collective_s"] / max(step_bound, 1e-30),
+            }
+            rows.append((
+                f"roofline/{cell['arch']}/{cell['shape']}",
+                round(step_bound * 1e6, 1),
+                f"compute={r['compute_s'] * 1e3:.2f}ms memory={r['memory_s'] * 1e3:.2f}ms "
+                f"collective={r['collective_s'] * 1e3:.2f}ms dominant={r['dominant']} "
+                f"useful_flops={r['useful_flops_ratio']:.2f} "
+                f"params/dev={cell['param_bytes_per_device'] / 2**30:.2f}GiB",
+            ))
+        rows.append((f"roofline/summary_{mesh}", ok,
+                     f"ok={ok} skipped={skipped} failed={failed}"))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "Roofline — per (arch × shape), single-pod mesh")

@@ -1,0 +1,57 @@
+"""Paper Fig. 7 / §5.4: transfer across input sizes of the SAME model.
+
+Every kernel changes when the sequence length changes (new workload IDs →
+Ansor must retune), but transfer-tuning reuses the schedules.  We tune each
+arch at seq 4096 and transfer to seq 2048 and 8192 (and the reverse for the
+long→short vs short→long asymmetry the paper observed).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.configs import get_arch, get_shape
+from repro.core.database import Record, ScheduleDB
+from repro.core.extract import extract_kernels
+from repro.core.transfer import transfer_tune
+from repro.core.autoscheduler import tune_model
+
+ARCHS = ("gemma2-2b", "rwkv6-1.6b", "starcoder2-7b")
+
+
+def _uses(arch: str, seq: int):
+    shape = dataclasses.replace(get_shape("train_4k"), seq_len=seq)
+    return extract_kernels(get_arch(arch), shape, dp=common.DP, tp=common.TP)
+
+
+def run() -> list[tuple]:
+    rows = []
+    payload = {}
+    for arch in ARCHS:
+        results = {}
+        tuned = {}
+        for seq in (2048, 4096):
+            db = ScheduleDB()
+            res = tune_model(_uses(arch, seq), model_id=f"{arch}@{seq}",
+                             total_trials=512, seed=common.SEED)
+            for r in res.records:
+                db.add(r)
+            tuned[seq] = (db, res)
+        for src, dst in ((4096, 2048), (2048, 4096), (4096, 8192)):
+            db, _ = tuned[src] if src in tuned else tuned[4096]
+            tt = transfer_tune(_uses(arch, dst), db, model_id=f"{arch}@{dst}",
+                               seed=common.SEED)
+            results[f"{src}->{dst}"] = tt.speedup
+            rows.append((
+                f"fig7/{arch}/{src}to{dst}",
+                round(tt.tuned_seconds * 1e6, 1),
+                f"speedup={tt.speedup:.2f}x coverage={tt.coverage():.0%} "
+                f"search={tt.search_time_s:.0f}s",
+            ))
+        payload[arch] = results
+    common.save_result("fig7_seqlen", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "Fig.7 — sequence-length transfer")

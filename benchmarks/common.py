@@ -1,0 +1,112 @@
+"""Shared benchmark infrastructure.
+
+The benchmarks reproduce the paper's tables/figures over the 10 assigned
+architectures.  Full auto-scheduling of every arch (the "Ansor 20k-trials"
+analogue, scaled to FULL_TRIALS) is expensive, so each arch's tuning result
+— records, untuned/tuned seconds, and the full search trace — is cached
+under benchmarks/results/tuning/ and reused across benchmark modules.
+
+Conventions: all times are *cost-model seconds* (kernel runtimes) or
+*virtual search seconds* (the simulated measurement harness); see DESIGN.md.
+Mesh-local extents use the production single-pod mesh (dp=16, tp=16).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.configs import ARCH_IDS
+from repro.core.autoscheduler import TracePoint, tune_model
+from repro.core.database import Record, ScheduleDB
+from repro.core.extract import extract_kernels
+from repro.core.tuner import arch_uses
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+TUNING_DIR = os.path.join(RESULTS_DIR, "tuning")
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+FULL_TRIALS = 1536     # "recommended full budget" analogue (scaled from 20k)
+DP, TP = 16, 16        # production single-pod mesh
+SHAPE = "train_4k"
+SEED = 0
+
+
+def _tuning_path(arch: str, shape: str = SHAPE) -> str:
+    os.makedirs(TUNING_DIR, exist_ok=True)
+    return os.path.join(TUNING_DIR, f"{arch}__{shape}.json")
+
+
+def tune_arch_cached(arch: str, shape: str = SHAPE, trials: int = FULL_TRIALS,
+                     seed: int = SEED) -> dict:
+    """Full-budget tuning of one arch; cached to disk with its search trace."""
+    path = _tuning_path(arch, shape)
+    if os.path.exists(path):
+        with open(path) as f:
+            d = json.load(f)
+        if d["trials"] >= trials:
+            return d
+    uses = arch_uses(arch, shape, dp=DP, tp=TP)
+    t0 = time.monotonic()
+    res = tune_model(uses, model_id=arch, total_trials=trials, seed=seed)
+    out = {
+        "arch": arch,
+        "shape": shape,
+        "trials": res.total_trials,
+        "untuned_seconds": res.untuned_seconds,
+        "tuned_seconds": res.tuned_seconds,
+        "search_time_s": res.search_time_s,
+        "wall_time_s": round(time.monotonic() - t0, 2),
+        "records": [r.to_json() for r in res.records],
+        "trace": [[p.search_time_s, p.best_seconds, p.trials] for p in res.trace],
+    }
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return out
+
+
+def full_db(shape: str = SHAPE) -> ScheduleDB:
+    """ScheduleDB holding every arch's full-budget tuning records."""
+    db = ScheduleDB()
+    for arch in ARCH_IDS:
+        d = tune_arch_cached(arch, shape)
+        for r in d["records"]:
+            db.add(Record.from_json(r))
+    return db
+
+
+def trace_points(d: dict) -> list[TracePoint]:
+    return [TracePoint(t, s, n) for t, s, n in d["trace"]]
+
+
+def speedup_at_time(d: dict, budget_s: float) -> float:
+    """Ansor's speedup given `budget_s` virtual search seconds (trace lookup)."""
+    best = d["untuned_seconds"]
+    for t, s, _ in d["trace"]:
+        if t <= budget_s:
+            best = min(best, s)
+        else:
+            break
+    return d["untuned_seconds"] / best
+
+
+def time_to_reach(d: dict, target_seconds: float) -> float | None:
+    """Virtual search seconds Ansor needs to reach `target_seconds` model time."""
+    for t, s, _ in d["trace"]:
+        if s <= target_seconds:
+            return t
+    return None
+
+
+def emit(rows: list[tuple], header: str | None = None) -> None:
+    """CSV lines: name,us_per_call,derived (the harness contract)."""
+    if header:
+        print(f"# {header}")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+def save_result(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)

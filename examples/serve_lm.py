@@ -1,0 +1,50 @@
+"""Batched serving with continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Runs a stream of variable-length requests through the slot-based engine
+(requests join and leave mid-flight), for a dense arch and a sliding-window
+arch (ring KV caches), reporting throughput.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.serving import ServingEngine
+
+
+def drive(arch: str, n_requests: int = 10, slots: int = 4):
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, slots=slots, max_len=96)
+    rng = np.random.default_rng(0)
+    pending = [
+        [int(t) for t in rng.integers(1, cfg.vocab_size, rng.integers(3, 12))]
+        for _ in range(n_requests)
+    ]
+    done = []
+    t0 = time.monotonic()
+    steps = 0
+    while pending or engine.active:
+        while pending and engine.add_request(pending[0], max_new_tokens=int(rng.integers(4, 12))):
+            pending.pop(0)
+        done.extend(engine.step())
+        steps += 1
+    dt = time.monotonic() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"{arch:20s} {len(done)} requests, {toks} tokens, {steps} decode steps, "
+          f"{toks / dt:.1f} tok/s (slots={slots})")
+
+
+def main():
+    drive("minitron-4b")        # dense, full KV caches
+    drive("mixtral-8x22b")      # SWA: ring KV caches sized to the window
+    drive("recurrentgemma-2b")  # hybrid: recurrent states + local attention
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end training driver: train a small LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~10M params, CPU
+    PYTHONPATH=src python examples/train_lm.py --preset 100m   # ~100M params
+
+Exercises the full production loop on real (synthetic-corpus) data:
+deterministic sharded pipeline, AdamW with f32 masters + clipping + cosine
+schedule, scan+remat model, async checkpointing with resume, straggler
+monitor.  The loss curve is written to /tmp/repro_train_lm_loss.csv.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch, reduced
+from repro.data import DataConfig, Pipeline
+from repro.distributed import StragglerMonitor
+from repro.launch import steps as steps_mod
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+
+PRESETS = {
+    # (d_model, n_layers, n_heads, kv, d_ff, vocab) ≈ params
+    "10m": (256, 6, 4, 2, 1024, 4096),
+    "100m": (768, 12, 12, 4, 3072, 16384),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="10m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+
+    d, nl, h, kv, ff, v = PRESETS[args.preset]
+    cfg = dataclasses.replace(
+        reduced(get_arch("minitron-4b")),
+        d_model=d, n_layers=nl, n_heads=h, n_kv_heads=kv, head_dim=d // h,
+        d_ff=ff, vocab_size=v,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model} ff={cfg.d_ff} v={cfg.vocab_size})")
+
+    opt_cfg = AdamWConfig(peak_lr=3e-3, warmup_steps=args.steps // 10,
+                          total_steps=args.steps)
+    step_fn = jax.jit(steps_mod.make_train_step(model, opt_cfg),
+                      donate_argnums=(0, 1))
+    opt_state = steps_mod.init_opt_state(params)
+    data = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                               global_batch=args.batch))
+    manager = CheckpointManager(args.ckpt, keep=2)
+    monitor = StragglerMonitor()
+
+    losses = []
+    t_start = time.monotonic()
+    for step, np_batch in data:
+        if step >= args.steps:
+            break
+        t0 = time.monotonic()
+        batch = {"tokens": jnp.asarray(np_batch["tokens"])}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        monitor.record(step, time.monotonic() - t0)
+        if step % 20 == 0:
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  lr {float(m['lr']):.2e}  "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+        if step and step % 100 == 0:
+            manager.save(step, {"params": params, "opt": opt_state}, blocking=False)
+    data.close()
+    manager.save(len(losses), {"params": params, "opt": opt_state})
+    manager.wait()
+
+    dt = time.monotonic() - t_start
+    with open("/tmp/repro_train_lm_loss.csv", "w") as f:
+        f.writelines(f"{i},{l}\n" for i, l in enumerate(losses))
+    print(f"\n{len(losses)} steps in {dt:.0f}s "
+          f"({args.batch * args.seq * len(losses) / dt:.0f} tok/s)")
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(min {min(losses):.4f}); stragglers flagged: {len(monitor.flagged)}")
+    assert losses[-1] < losses[0], "training must reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: Transfer-Tuning (Gibson & Cano 2022) as a production JAX framework.
+
+Reuses auto-schedules across kernel classes to cut tensor-program tuning
+cost, integrated as a first-class feature of a multi-pod training/serving
+stack for 10 LM-family architectures on TPU v5e.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,24 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    n_experts=8,
+    moe_topk=2,
+    window=4096,
+    layer_pattern=("L",),  # SWA on every layer
+    mlp_kind="swiglu",
+    pos="rope",
+    rope_theta=1000000.0,
+    source="[arXiv:2401.04088; hf]",
+)

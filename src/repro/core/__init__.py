@@ -1,0 +1,69 @@
+"""Transfer-tuning core: the paper's contribution as a composable library.
+
+Public API:
+    KernelInstance / KernelUse / kernel classes ............ workload.py
+    Schedule / concretize / default_schedule ............... schedule.py
+    measure / evaluate / model_seconds (v5e cost model) .... cost_model.py
+    tune_kernel / tune_model (Ansor analogue) .............. autoscheduler.py
+    ScheduleDB / Record .................................... database.py
+    transfer_tune / transfer_matrix ........................ transfer.py
+    select_donor / top_donors (Eq. 1) ...................... heuristic.py
+    extract_kernels (model config -> kernel workloads) ..... extract.py
+"""
+from repro.core.autoscheduler import ModelTuneResult, TuneResult, tune_kernel, tune_model, tune_model_into_db
+from repro.core.cost_model import (
+    CostBreakdown,
+    Measurement,
+    class_proportions,
+    evaluate,
+    kernel_seconds,
+    measure,
+    model_seconds,
+)
+from repro.core.database import Record, ScheduleDB
+from repro.core.heuristic import DonorScore, donor_scores, select_donor, top_donors
+from repro.core.schedule import ConcreteSchedule, Schedule, ScheduleInvalid, concretize, default_schedule
+from repro.core.transfer import KernelTransfer, TransferResult, transfer_matrix, transfer_tune
+from repro.core.workload import KERNEL_CLASSES, KernelInstance, KernelUse, classes_in, dedup_uses
+
+__all__ = [
+    "KERNEL_CLASSES",
+    "ConcreteSchedule",
+    "CostBreakdown",
+    "DonorScore",
+    "KernelInstance",
+    "KernelTransfer",
+    "KernelUse",
+    "Measurement",
+    "ModelTuneResult",
+    "Record",
+    "Schedule",
+    "ScheduleDB",
+    "ScheduleInvalid",
+    "TransferResult",
+    "TuneResult",
+    "class_proportions",
+    "classes_in",
+    "concretize",
+    "dedup_uses",
+    "default_schedule",
+    "donor_scores",
+    "evaluate",
+    "extract_kernels",
+    "kernel_seconds",
+    "measure",
+    "model_seconds",
+    "select_donor",
+    "top_donors",
+    "transfer_matrix",
+    "transfer_tune",
+    "tune_kernel",
+    "tune_model",
+    "tune_model_into_db",
+]
+
+
+def extract_kernels(*args, **kwargs):  # lazy import: configs depend on models
+    from repro.core.extract import extract_kernels as _ek
+
+    return _ek(*args, **kwargs)

@@ -1,0 +1,152 @@
+"""Schedule database: persistent store of tuned auto-schedules.
+
+Mirrors Ansor's log-file records: each record binds a workload (instance) to
+a measured schedule plus provenance (which model it was tuned for).  The DB
+answers the two reuse queries:
+
+* exact workload match (Ansor's native reuse);
+* all schedules of a kernel class, optionally filtered by donor model
+  (transfer-tuning's candidate pool, paper §4.2/§5.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Iterable, Mapping, Sequence
+
+from repro.core.schedule import Schedule
+from repro.core.workload import KernelInstance
+
+
+@dataclasses.dataclass(frozen=True)
+class Record:
+    instance: KernelInstance
+    schedule: Schedule
+    seconds: float           # measured (cost-model) seconds on the source instance
+    model_id: str            # donor model the kernel belongs to
+    trials: int = 0          # search trials spent producing this record
+
+    def to_json(self) -> dict:
+        return {
+            "instance": self.instance.to_json(),
+            "schedule": self.schedule.to_json(),
+            "seconds": self.seconds,
+            "model_id": self.model_id,
+            "trials": self.trials,
+        }
+
+    @staticmethod
+    def from_json(d: Mapping) -> "Record":
+        return Record(
+            instance=KernelInstance.from_json(d["instance"]),
+            schedule=Schedule.from_json(d["schedule"]),
+            seconds=float(d["seconds"]),
+            model_id=d["model_id"],
+            trials=int(d.get("trials", 0)),
+        )
+
+
+class ScheduleDB:
+    """In-memory schedule store with JSON persistence (atomic writes).
+
+    Holds up to MAX_PER_WORKLOAD distinct schedules per (workload, model) —
+    Ansor's tuning logs retain every measured schedule, and transfer-tuning
+    draws its candidate pool from them; keeping the top-k per donor kernel
+    preserves pool sizes comparable to the paper's many-kernels-per-class
+    CNNs even though LM stacks dedup to few unique workloads per class.
+    """
+
+    MAX_PER_WORKLOAD = 5
+
+    def __init__(self, records: Iterable[Record] = ()):
+        self._by_workload: dict[tuple[str, str], list[Record]] = {}
+        for r in records:
+            self.add(r)
+
+    # -- mutation -----------------------------------------------------------
+    def add(self, record: Record) -> None:
+        key = (record.instance.workload_key(), record.model_id)
+        bucket = self._by_workload.setdefault(key, [])
+        for i, r in enumerate(bucket):
+            if r.schedule == record.schedule:
+                if record.seconds < r.seconds:
+                    bucket[i] = record
+                    bucket.sort(key=lambda x: x.seconds)
+                return
+        bucket.append(record)
+        bucket.sort(key=lambda r: r.seconds)
+        del bucket[self.MAX_PER_WORKLOAD:]
+
+    @property
+    def _records(self) -> dict:
+        # flattened view keyed by (workload, model, rank)
+        return {
+            (k[0], k[1], i): r
+            for k, rs in self._by_workload.items()
+            for i, r in enumerate(rs)
+        }
+
+    def merge(self, other: "ScheduleDB") -> None:
+        for r in other.records():
+            self.add(r)
+
+    # -- queries -------------------------------------------------------------
+    def records(self) -> list[Record]:
+        return [r for rs in self._by_workload.values() for r in rs]
+
+    def models(self) -> list[str]:
+        return sorted({m for (_w, m) in self._by_workload})
+
+    def exact(self, instance: KernelInstance) -> Record | None:
+        """Best record for this exact workload (any model) — Ansor reuse."""
+        wk = instance.workload_key()
+        hits = [rs[0] for (k, _m), rs in self._by_workload.items() if k == wk and rs]
+        return min(hits, key=lambda r: r.seconds) if hits else None
+
+    def by_class(self, class_id: str, models: Sequence[str] | None = None) -> list[Record]:
+        """All schedules of a class — the transfer-tuning candidate pool."""
+        out = [
+            r
+            for r in self.records()
+            if r.instance.class_id == class_id and (models is None or r.model_id in models)
+        ]
+        return sorted(out, key=lambda r: (r.model_id, r.seconds))
+
+    def class_counts(self, model_id: str) -> dict[str, int]:
+        """|W_Tc| per class for one donor (Eq. 1): distinct tuned *kernels*
+        per class, matching the paper's per-kernel counting."""
+        counts: dict[str, int] = {}
+        for (_w, m), rs in self._by_workload.items():
+            if m == model_id and rs:
+                c = rs[0].instance.class_id
+                counts[c] = counts.get(c, 0) + 1
+        return counts
+
+    def __len__(self) -> int:
+        return len(self.records())
+
+    # -- persistence ----------------------------------------------------------
+    def save(self, path: str) -> None:
+        payload = {"version": 1, "records": [r.to_json() for r in self.records()]}
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    @staticmethod
+    def load(path: str) -> "ScheduleDB":
+        with open(path) as f:
+            payload = json.load(f)
+        return ScheduleDB(Record.from_json(d) for d in payload["records"])
+
+    @staticmethod
+    def load_or_empty(path: str) -> "ScheduleDB":
+        return ScheduleDB.load(path) if os.path.exists(path) else ScheduleDB()

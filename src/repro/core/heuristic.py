@@ -1,0 +1,123 @@
+"""Donor-model selection heuristic (paper §4.4, Eq. 1).
+
+For a target model M with kernel classes C, choose the donor T maximizing
+
+    score(T) = Σ_{c ∈ C}  P_c² · sqrt(|W_Tc|)
+
+where P_c is class c's share of M's *untuned* inference time and W_Tc the set
+of tuned schedules of class c available from T.  Squaring P_c boosts the
+influence of expensive classes; the square root damps donors with very many
+schedules (paper's stated rationale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from repro.core.cost_model import class_proportions
+from repro.core.database import ScheduleDB
+from repro.core.workload import KernelUse
+
+
+@dataclasses.dataclass(frozen=True)
+class DonorScore:
+    model_id: str
+    score: float
+    per_class: tuple[tuple[str, float], ...]  # class -> contribution
+
+
+def donor_scores(
+    uses: Sequence[KernelUse],
+    db: ScheduleDB,
+    exclude: Sequence[str] = (),
+    proportions: Mapping[str, float] | None = None,
+) -> list[DonorScore]:
+    """Rank all donor models in the DB for this target (descending score)."""
+    p = dict(proportions) if proportions is not None else class_proportions(uses)
+    scores: list[DonorScore] = []
+    for model_id in db.models():
+        if model_id in exclude:
+            continue
+        counts = db.class_counts(model_id)
+        contrib = []
+        total = 0.0
+        for c, pc in p.items():
+            n = counts.get(c, 0)
+            s = (pc ** 2) * math.sqrt(n)
+            if s > 0:
+                contrib.append((c, s))
+            total += s
+        scores.append(DonorScore(model_id=model_id, score=total, per_class=tuple(contrib)))
+    scores.sort(key=lambda s: (-s.score, s.model_id))
+    return scores
+
+
+def select_donor(uses: Sequence[KernelUse], db: ScheduleDB,
+                 exclude: Sequence[str] = ()) -> str | None:
+    ranked = donor_scores(uses, db, exclude=exclude)
+    if not ranked or ranked[0].score <= 0.0:
+        return None
+    return ranked[0].model_id
+
+
+def top_donors(uses: Sequence[KernelUse], db: ScheduleDB, k: int = 3,
+               exclude: Sequence[str] = ()) -> list[DonorScore]:
+    """Top-k choices (paper Table 3)."""
+    return donor_scores(uses, db, exclude=exclude)[:k]
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: compatibility-aware donor selection (the paper's §4.4.2
+# future-work direction — "a better predictive model of which schedules may
+# perform well").  Eq. 1 counts schedules but ignores whether their tiles
+# can legally bind to the target's extents; divisibility is *static*
+# (zero measurement cost), so we weight each class contribution by the
+# fraction of the donor's schedules that strictly concretize on the
+# target's kernels of that class.
+# ---------------------------------------------------------------------------
+
+
+def donor_scores_v2(
+    uses: Sequence[KernelUse],
+    db: ScheduleDB,
+    exclude: Sequence[str] = (),
+    proportions: Mapping[str, float] | None = None,
+) -> list[DonorScore]:
+    from repro.core.schedule import is_valid
+
+    p = dict(proportions) if proportions is not None else class_proportions(uses)
+    targets_by_class: dict[str, list] = {}
+    for u in uses:
+        targets_by_class.setdefault(u.instance.class_id, []).append(u.instance)
+
+    scores: list[DonorScore] = []
+    for model_id in db.models():
+        if model_id in exclude:
+            continue
+        counts = db.class_counts(model_id)
+        contrib = []
+        total = 0.0
+        for c, pc in p.items():
+            n = counts.get(c, 0)
+            if n == 0:
+                continue
+            recs = db.by_class(c, [model_id])
+            pairs = [(r, t) for r in recs for t in targets_by_class.get(c, [])]
+            compat = (sum(is_valid(r.schedule, t) for r, t in pairs) / len(pairs)
+                      if pairs else 0.0)
+            s = (pc ** 2) * math.sqrt(n) * compat
+            if s > 0:
+                contrib.append((c, s))
+            total += s
+        scores.append(DonorScore(model_id=model_id, score=total, per_class=tuple(contrib)))
+    scores.sort(key=lambda s: (-s.score, s.model_id))
+    return scores
+
+
+def select_donor_v2(uses: Sequence[KernelUse], db: ScheduleDB,
+                    exclude: Sequence[str] = ()) -> str | None:
+    ranked = donor_scores_v2(uses, db, exclude=exclude)
+    if not ranked or ranked[0].score <= 0.0:
+        return None
+    return ranked[0].model_id

@@ -1,0 +1,165 @@
+"""Transfer-tuning engine (paper §4): reuse auto-schedules across kernels.
+
+For each kernel of the target model, every compatible schedule (same kernel
+class) from the donor pool is *applied and measured standalone*; the best
+valid one wins.  The accumulated measurement cost is transfer-tuning's search
+time — the quantity the paper compares against Ansor's (§4.3: "the time for
+testing each kernel of the target model with each valid schedule").
+
+Modes:
+* ``strict``   — paper-faithful: non-dividing/oversized tiles are invalid
+  (Fig. 4's -1 bars) and simply skipped.
+* ``adaptive`` — beyond-paper: shape-agnostic tile reformulation
+  (schedule.py) rescues otherwise-invalid transfers.  Reported separately.
+
+Exact workload hits (same class *and* shapes) reuse the donor schedule with
+zero extra measurements, matching Ansor's workload-ID reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+from repro.core.cost_model import kernel_seconds, measure
+from repro.core.database import Record, ScheduleDB
+from repro.core.schedule import Schedule, default_schedule
+from repro.core.workload import KernelInstance, KernelUse
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTransfer:
+    """Outcome of transfer-tuning one target kernel."""
+
+    instance: KernelInstance
+    chosen: Schedule | None          # None -> fall back to untuned default
+    chosen_from: str                 # donor model id ("" if default)
+    seconds: float                   # standalone (cost-model) seconds after choice
+    untuned_seconds: float
+    candidates: int                  # schedules evaluated
+    invalid: int                     # candidates rejected as invalid
+    exact_hit: bool                  # Ansor-style exact workload reuse
+
+    @property
+    def speedup(self) -> float:
+        return self.untuned_seconds / self.seconds
+
+
+@dataclasses.dataclass
+class TransferResult:
+    model_id: str
+    kernels: list[KernelTransfer]
+    uses: list[KernelUse]
+    search_time_s: float             # virtual seconds (measurement harness)
+    wall_time_s: float
+    untuned_seconds: float
+    tuned_seconds: float
+
+    @property
+    def speedup(self) -> float:
+        return self.untuned_seconds / self.tuned_seconds
+
+    def schedule_map(self) -> dict[str, Schedule]:
+        """workload_key -> chosen schedule (for model execution / launch)."""
+        out = {}
+        for k in self.kernels:
+            if k.chosen is not None:
+                out[k.instance.workload_key()] = k.chosen
+        return out
+
+    def coverage(self) -> float:
+        """Fraction of untuned model time whose kernels got a transferred
+        schedule (paper §5.2 discusses uncovered classes, e.g. MobileNetV2)."""
+        covered = sum(
+            u.use_count * k.untuned_seconds
+            for u, k in zip(self.uses, self.kernels)
+            if k.chosen is not None
+        )
+        return covered / self.untuned_seconds if self.untuned_seconds else 0.0
+
+
+def transfer_tune(
+    uses: Sequence[KernelUse],
+    db: ScheduleDB,
+    *,
+    model_id: str = "target",
+    donors: Sequence[str] | None = None,
+    mode: str = "strict",
+    seed: int = 0,
+    noise_sigma: float = 0.05,
+    max_candidates_per_kernel: int | None = None,
+) -> TransferResult:
+    """Transfer-tune a target model from donor schedules in ``db``.
+
+    ``donors=None`` uses the full pool (paper §5.5 "mixed"); a single-element
+    list is the paper's default one-to-one setting.
+    """
+    t0 = time.monotonic()
+    kernels: list[KernelTransfer] = []
+    search_time = 0.0
+    for u in uses:
+        inst = u.instance
+        untuned = kernel_seconds(inst, None)
+        exact = db.exact(inst)
+        if exact is not None and (donors is None or exact.model_id in donors):
+            # Ansor workload-ID reuse: no measurement needed.
+            m = measure(inst, exact.schedule, mode="strict", seed=seed, noise_sigma=0.0)
+            kernels.append(KernelTransfer(
+                instance=inst, chosen=exact.schedule, chosen_from=exact.model_id,
+                seconds=m.seconds, untuned_seconds=untuned,
+                candidates=0, invalid=0, exact_hit=True,
+            ))
+            continue
+        candidates = db.by_class(inst.class_id, models=donors)
+        if max_candidates_per_kernel is not None:
+            candidates = candidates[:max_candidates_per_kernel]
+        best_secs, best_sched, best_model, invalid = untuned, None, "", 0
+        for rec in candidates:
+            m = measure(inst, rec.schedule, mode=mode, seed=seed, noise_sigma=noise_sigma)
+            search_time += m.measure_cost_s
+            if not m.valid:
+                invalid += 1
+                continue
+            if m.seconds < best_secs:
+                best_secs, best_sched, best_model = m.seconds, rec.schedule, rec.model_id
+        final_secs = (
+            kernel_seconds(inst, best_sched, mode=mode) if best_sched is not None else untuned
+        )
+        kernels.append(KernelTransfer(
+            instance=inst, chosen=best_sched, chosen_from=best_model,
+            seconds=final_secs, untuned_seconds=untuned,
+            candidates=len(candidates), invalid=invalid, exact_hit=False,
+        ))
+    untuned_total = sum(u.use_count * k.untuned_seconds for u, k in zip(uses, kernels))
+    tuned_total = sum(u.use_count * k.seconds for u, k in zip(uses, kernels))
+    return TransferResult(
+        model_id=model_id,
+        kernels=kernels,
+        uses=list(uses),
+        search_time_s=search_time,
+        wall_time_s=time.monotonic() - t0,
+        untuned_seconds=untuned_total,
+        tuned_seconds=tuned_total,
+    )
+
+
+def transfer_matrix(
+    uses: Sequence[KernelUse],
+    db: ScheduleDB,
+    donors: Sequence[str] | None = None,
+    mode: str = "strict",
+    seed: int = 0,
+) -> dict[str, dict[str, float | None]]:
+    """Paper Fig. 4: per-(target kernel × donor schedule) standalone seconds.
+
+    Returns {target workload_key: {donor record key: seconds | None(invalid)}}.
+    """
+    out: dict[str, dict[str, float | None]] = {}
+    for u in uses:
+        row: dict[str, float | None] = {}
+        for rec in db.by_class(u.instance.class_id, models=donors):
+            key = f"{rec.model_id}/{rec.instance.workload_key()}"
+            m = measure(u.instance, rec.schedule, mode=mode, seed=seed)
+            row[key] = m.seconds
+        out[u.instance.workload_key()] = row
+    return out

@@ -1,0 +1,61 @@
+"""Top-level tuning API gluing the core together (the paper's workflow).
+
+    uses  = arch_uses("gemma2-2b", "train_4k", dp=16, tp=16)
+    native = tune_arch(db, "gemma2-2b", ...)          # Ansor analogue
+    donor  = select_donor(uses, db)                   # Eq. 1
+    tt     = transfer_arch(db, "gemma2-2b", donors=[donor])   # transfer-tuning
+
+All results carry virtual search seconds (measurement-harness time, the
+paper's cost axis) and cost-model kernel seconds.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.configs.base import get_arch, get_shape
+from repro.core.autoscheduler import ModelTuneResult, tune_model
+from repro.core.database import ScheduleDB
+from repro.core.extract import extract_kernels
+from repro.core.heuristic import select_donor, select_donor_v2, top_donors
+from repro.core.transfer import TransferResult, transfer_tune
+from repro.core.workload import KernelUse
+
+
+def arch_uses(arch: str, shape: str = "train_4k", *, dp: int = 1, tp: int = 1
+              ) -> list[KernelUse]:
+    return extract_kernels(get_arch(arch), get_shape(shape), dp=dp, tp=tp)
+
+
+def tune_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
+              dp: int = 1, tp: int = 1, total_trials: int = 1024, seed: int = 0,
+              **kw) -> ModelTuneResult:
+    """Full auto-scheduling of one arch; records land in `db` under the arch id."""
+    uses = arch_uses(arch, shape, dp=dp, tp=tp)
+    res = tune_model(uses, model_id=arch, total_trials=total_trials, seed=seed, **kw)
+    for r in res.records:
+        db.add(r)
+    return res
+
+
+def transfer_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
+                  dp: int = 1, tp: int = 1, donors: Sequence[str] | None | str = "auto",
+                  mode: str = "strict", seed: int = 0, **kw) -> TransferResult:
+    """Transfer-tune one arch from donor schedules.
+
+    donors="auto" applies the Eq. 1 heuristic (excluding the arch itself);
+    donors="auto2" the beyond-paper compatibility-aware variant;
+    donors=None uses the full mixed pool (paper §5.5); otherwise a list.
+    """
+    uses = arch_uses(arch, shape, dp=dp, tp=tp)
+    if donors in ("auto", "auto2"):
+        pick = select_donor_v2 if donors == "auto2" else select_donor
+        best = pick(uses, db, exclude=(arch,))
+        donors = [best] if best is not None else []
+    return transfer_tune(uses, db, model_id=arch, donors=donors, mode=mode,
+                         seed=seed, **kw)
+
+
+def donor_ranking(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
+                  dp: int = 1, tp: int = 1, k: int = 3):
+    uses = arch_uses(arch, shape, dp=dp, tp=tp)
+    return top_donors(uses, db, k=k, exclude=(arch,))

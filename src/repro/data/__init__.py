@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, MemmapSource, Pipeline, SyntheticSource, make_source
+
+__all__ = ["DataConfig", "MemmapSource", "Pipeline", "SyntheticSource", "make_source"]

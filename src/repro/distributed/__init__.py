@@ -1,0 +1,28 @@
+from repro.distributed.fault import PreemptionHandler, StragglerMonitor, elastic_restore
+from repro.distributed.pipeline import bubble_fraction, pipeline_apply
+from repro.distributed.sharding import (
+    activation_sharding,
+    batch_shardings,
+    fsdp_axes,
+    logits_sharding,
+    moe_expert_parallel,
+    opt_state_shardings,
+    param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "PreemptionHandler",
+    "StragglerMonitor",
+    "activation_sharding",
+    "batch_shardings",
+    "bubble_fraction",
+    "elastic_restore",
+    "fsdp_axes",
+    "logits_sharding",
+    "moe_expert_parallel",
+    "opt_state_shardings",
+    "param_shardings",
+    "param_spec",
+    "pipeline_apply",
+]

@@ -1,0 +1,96 @@
+"""Fault tolerance: straggler detection, preemption handling, elastic re-mesh.
+
+* :class:`StragglerMonitor` — EWMA of per-step wall times; steps slower than
+  ``threshold×`` the EWMA are flagged (on a real fleet this feeds the
+  controller that triggers hot-spare swaps; here it also powers tests and
+  the train-loop log).
+* :class:`PreemptionHandler` — converts SIGTERM (and a programmatic
+  ``request()``) into a "checkpoint now, then exit cleanly" flag the train
+  loop polls each step.
+* :func:`elastic_restore` — restore a checkpoint onto a *different* mesh
+  (fewer/more devices): rebuilds shardings for the new mesh and device_puts
+  every leaf accordingly (checkpoints store full logical arrays, so this is
+  total — scale 512→256 or down to the 8-device test mesh).
+"""
+from __future__ import annotations
+
+import signal
+import threading
+import time
+from typing import Any
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.2, threshold: float = 2.0, warmup: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: float | None = None
+        self.count = 0
+        self.flagged: list[tuple[int, float, float]] = []  # (step, dt, ewma)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Record one step duration; returns True if flagged as straggler."""
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = self.count > self.warmup and dt > self.threshold * self.ewma
+        if is_straggler:
+            self.flagged.append((step, dt, self.ewma))
+        else:
+            # stragglers don't poison the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+class PreemptionHandler:
+    """SIGTERM → graceful 'checkpoint and exit' request."""
+
+    def __init__(self, install_signal: bool = True):
+        self._event = threading.Event()
+        if install_signal:
+            try:
+                signal.signal(signal.SIGTERM, lambda *_: self._event.set())
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def request(self) -> None:
+        self._event.set()
+
+    @property
+    def requested(self) -> bool:
+        return self._event.is_set()
+
+
+def elastic_restore(manager: CheckpointManager, template: Any, cfg: ArchConfig,
+                    new_mesh, step: int | None = None) -> tuple[int, Any]:
+    """Restore (params, opt_state, ...) bundle onto `new_mesh`.
+
+    `template` must be the abstract bundle {"params":…, "opt":…}; shardings
+    are rebuilt for the new mesh from the same logical rules, so any
+    divisibility fallbacks re-evaluate for the new axis sizes.
+    """
+    p_shard = shd.param_shardings(template["params"], cfg, new_mesh)
+    shardings = {"params": p_shard}
+    if "opt" in template:
+        shardings["opt"] = shd.opt_state_shardings(p_shard, new_mesh)
+    full = dict(template)
+    return manager.restore(full, step=step, shardings=_pad_tree(shardings, full))
+
+
+def _pad_tree(shardings: dict, template: dict) -> dict:
+    """Extend the sharding tree with None for any extra template keys."""
+    out = {}
+    for k, v in template.items():
+        if k in shardings:
+            out[k] = shardings[k]
+        else:
+            out[k] = jax.tree_util.tree_map(lambda _: None, v)
+    return out

@@ -1,0 +1,289 @@
+"""Logical-axis sharding rules: DP + FSDP (ZeRO-3) + TP/EP + activation SP.
+
+Mesh axes:
+  ``pod``    (multi-pod only) — outer data parallelism across pods,
+  ``data``   — data parallelism + FSDP param/optimizer sharding,
+  ``model``  — tensor / expert parallelism.
+
+Rules are *path-based* over the param pytree (the framework owns the
+naming), with divisibility-aware fallbacks:
+  * expert dims shard over ``model`` when n_experts % model_size == 0
+    (dbrx 16e on 16) else experts replicate and d_ff takes ``model``
+    (mixtral 8e on 16 → TP inside experts);
+  * head dims shard over ``model`` when divisible, else replicate
+    (GSPMD would pad; we prefer explicit replication for KV heads).
+
+Activations: the residual stream is constrained to
+P((pod,data), None, model) — embedding-dim sharded layer boundaries
+(Megatron-SP analogue) so 40-layer remat checkpoints fit HBM; XLA inserts
+the all-gather/reduce-scatter pairs around attention/MLP blocks.
+
+Optimizer state (m/v/master) reuses the param rule leaf-for-leaf.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def all_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_dominant(cfg: ArchConfig, mesh: Mesh, *, kind: str, global_batch: int) -> bool:
+    """Pure-DP/ZeRO-3 strategy gate (§Perf iteration 7): small models whose
+    fully-sharded state fits pay far less in weight gathers (≈4·params
+    bytes/step) than tensor parallelism pays in activation reductions
+    (≈4·layers·B_local·S·D bytes/step).  Applied when the whole batch
+    divides the chip count and params+optimizer ≤ ~25% HBM when
+    fully sharded."""
+    import math as _math
+
+    chips = _math.prod(tuple(mesh.shape.values()))
+    if kind != "train" or global_batch % chips:
+        return False
+    return cfg.param_count() <= 3.5e9
+
+
+def _axis_size(mesh: Mesh, axes: tuple[str, ...] | str | None) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """Use the axes only if they divide the dim; else replicate."""
+    return axes if dim % _axis_size(mesh, axes) == 0 else None
+
+
+def moe_expert_parallel(cfg: ArchConfig, mesh: Mesh) -> bool:
+    return cfg.n_experts > 0 and cfg.n_experts % mesh.shape["model"] == 0
+
+
+#: leaf-name -> logical axis layout. "fsdp" / "tp" / None per dimension,
+#: matched against the *trailing* dims of the leaf (stacked scan groups add
+#: a leading repeat dim that stays unsharded).
+_LEAF_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "embed": ("tp", "fsdp"),            # (V, D)
+    "lm_head": ("fsdp", "tp"),          # (D, V)
+    "dec_pos": (None, "fsdp"),
+    "enc_pos": (None, "fsdp"),
+    "vis_proj": ("fsdp", "tp"),
+    # attention projections
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # dense MLP (gated or plain)
+    "w_in": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"),
+    "b_in": ("tp",),
+    # MoE (expert-parallel layout; TP fallback applied below)
+    "router": ("fsdp", None),
+    # rwkv
+    "wg": ("fsdp", "tp"),
+    "wr": ("fsdp", "tp"),
+    "wa": ("fsdp", None),
+    "wb": (None, "tp"),
+    "ck": ("fsdp", "tp"),
+    "cv": ("tp", "fsdp"),
+    "cr": ("fsdp", "tp"),
+    "u": ("tp", None),                  # (H, hd)
+    # griffin
+    "w_gate": ("fsdp", "tp"),
+    "w_x": ("fsdp", "tp"),
+    "conv": (None, "tp"),
+    "lambda": ("tp",),
+    "gate_a": ("tp",),
+    "gate_i": ("tp",),
+}
+
+
+def _leaf_name(path: str) -> str:
+    # keystr like "['groups']['0']['attn']['wq']" -> "wq"
+    return path.rstrip("]'").rsplit("'", 1)[-1] if "'" in path else path
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ArchConfig, mesh: Mesh,
+               dp_only: bool = False) -> P:
+    """PartitionSpec for one param leaf, by its tree path.
+
+    dp_only: pure-DP/ZeRO-3 strategy — the "fsdp" logical axis covers the
+    whole mesh and "tp" dims replicate (weights gathered, no TP collectives).
+    """
+    fsdp = all_axes(mesh) if dp_only else fsdp_axes(mesh)
+    tp_phys = None if dp_only else "model"
+    name = _leaf_name(path)
+
+    def resolve(layout: tuple) -> P:
+        # align layout to the trailing dims; leading (stack) dims unsharded
+        pad = len(shape) - len(layout)
+        full = (None,) * pad + layout
+        axes = []
+        for a, d in zip(full, shape):
+            phys = fsdp if a == "fsdp" else (tp_phys if a == "tp" else None)
+            axes.append(_maybe(mesh, phys, d))
+        return P(*axes)
+
+    # MoE expert weights: (E, D, 2F)/(E, F, D) — EP when E divides the axis.
+    if name in ("w_in", "w_out") and len(shape) >= 3 and cfg.n_experts > 0 and shape[-3] == cfg.n_experts:
+        if moe_expert_parallel(cfg, mesh):
+            layout = ("tp", "fsdp", None) if name == "w_in" else ("tp", None, "fsdp")
+        else:
+            layout = (None, "fsdp", "tp") if name == "w_in" else (None, "tp", "fsdp")
+        return resolve(layout)
+    if name in _LEAF_RULES:
+        return resolve(_LEAF_RULES[name])
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(abstract_params: Any, cfg: ArchConfig, mesh: Mesh,
+                    dp_only: bool = False) -> Any:
+    """NamedSharding tree matching the (abstract) param tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        out.append(NamedSharding(mesh, param_spec(path, leaf.shape, cfg, mesh, dp_only)))
+    return treedef.unflatten(out)
+
+
+def opt_state_shardings(param_shardings_tree: Any, mesh: Mesh) -> dict:
+    """Optimizer state inherits param shardings (m/v/master); step replicated."""
+    return {
+        "m": param_shardings_tree,
+        "v": param_shardings_tree,
+        "master": param_shardings_tree,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(specs: dict, cfg: ArchConfig, mesh: Mesh,
+                    dp_only: bool = False) -> dict:
+    """Shardings for input_specs trees (train/prefill/decode)."""
+    fsdp = all_axes(mesh) if dp_only else fsdp_axes(mesh)
+
+    def leaf_spec(path: str, leaf) -> NamedSharding:
+        shape = leaf.shape
+        if path.endswith("['tokens']") or "tokens" in path:
+            if len(shape) == 1:  # decode: (B,)
+                return NamedSharding(mesh, P(_maybe(mesh, fsdp, shape[0])))
+            b, s = shape
+            if b % _axis_size(mesh, fsdp) == 0:
+                return NamedSharding(mesh, P(fsdp, None))
+            return NamedSharding(mesh, P(None, _maybe(mesh, fsdp, s)))
+        if "mask" in path:
+            b = shape[0]
+            return NamedSharding(mesh, P(_maybe(mesh, fsdp, b), None))
+        if "frames" in path or "patch_embeds" in path:
+            return NamedSharding(mesh, P(_maybe(mesh, fsdp, shape[0]), None, None))
+        # cache leaves
+        return _cache_leaf_sharding(path, shape, cfg, mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    return treedef.unflatten([
+        leaf_spec(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat
+    ])
+
+
+def _cache_leaf_sharding(path: str, shape: tuple[int, ...], cfg: ArchConfig,
+                         mesh: Mesh) -> NamedSharding:
+    fsdp = fsdp_axes(mesh)
+    nd = len(shape)
+    if nd == 0:  # step counter
+        return NamedSharding(mesh, P())
+    # stacked-layer leading dim? KV caches inside scan groups have shape
+    # (reps, B, H, S, D); recurrent states (reps, B, ...); detect by name.
+    has_rep = "groups" in path or "layers" in path
+    spec: list = [None] * nd
+    i = 1 if has_rep else 0
+    if nd - i >= 1 and shape[i] % _axis_size(mesh, fsdp) == 0 and shape[i] > 1:
+        spec[i] = fsdp                 # batch dim
+        batch_sharded = True
+    else:
+        batch_sharded = False
+    if "['k']" in path or "['v']" in path or "cross_k" in path or "cross_v" in path:
+        # (B, Hkv, S, hd): heads over model if divisible; else shard head_dim
+        # (GQA kv-head counts are often below the TP degree — leaving the
+        # cache replicated costs an all-gather of the whole cache per step,
+        # measured ~100 GiB on stablelm decode_32k; see EXPERIMENTS §Perf).
+        if shape[i + 1] % mesh.shape["model"] == 0:
+            spec[i + 1] = "model"
+        elif shape[i + 3] % mesh.shape["model"] == 0:
+            spec[i + 3] = "model"
+        if not batch_sharded and shape[i + 2] % _axis_size(mesh, fsdp) == 0:
+            spec[i + 2] = fsdp
+    elif "state" in path or "['h']" in path:
+        # recurrent states: shard the big channel/head dim over model
+        for j in range(i + 1, nd):
+            if shape[j] % mesh.shape["model"] == 0 and shape[j] >= mesh.shape["model"]:
+                spec[j] = "model"
+                break
+    elif "conv" in path or "last_" in path:
+        if shape[-1] % mesh.shape["model"] == 0:
+            spec[-1] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def activation_sharding(mesh: Mesh, cfg: ArchConfig,
+                        dp_only: bool = False,
+                        seq_parallel: bool = False) -> NamedSharding:
+    """Residual-stream constraint (B, S, D): batch over fsdp, D over model
+    (pure-DP strategy: batch over the whole mesh, D replicated;
+    seq_parallel: S over model — context parallelism for prefill, §Perf it-8)."""
+    if dp_only:
+        return NamedSharding(mesh, P(all_axes(mesh), None, None))
+    fsdp = fsdp_axes(mesh)
+    if seq_parallel:
+        return NamedSharding(mesh, P(fsdp, "model", None))
+    d_ok = cfg.d_model % mesh.shape["model"] == 0
+    return NamedSharding(mesh, P(fsdp, None, "model" if d_ok else None))
+
+
+def internal_sharding_rules(mesh: Mesh, cfg: ArchConfig) -> dict:
+    """Named constraints for internal activations (context.set_sharding_rules).
+
+    moe_buf (E, cap, D): expert-parallel archs shard experts over `model`
+    (tokens all-to-all to their experts' shards); TP-fallback archs shard
+    capacity over the fsdp axes so the dispatch scatter stays data-local.
+    """
+    rules: dict = {}
+    if cfg.n_experts > 0:
+        fsdp = fsdp_axes(mesh)
+        if not moe_expert_parallel(cfg, mesh):
+            # TP experts: capacity over fsdp, D replicated per shard — the
+            # expert GEMM contracts D against fsdp-gathered weights and emits
+            # (E, cap/fsdp, F/model) without resharding the buffer.  Measured
+            # −53% collective bytes on mixtral train_4k (§Perf iteration 1).
+            rules["moe_buf"] = NamedSharding(mesh, P(None, fsdp, None))
+        # EP experts: forcing an E-sharded buffer makes GSPMD lower the
+        # data-dependent scatter as replicate+all-reduce (+70% collective on
+        # dbrx, §Perf iteration 3 — refuted); leave GSPMD's layout choice.
+        d_ok = cfg.d_model % mesh.shape["model"] == 0
+        rules["moe_out"] = NamedSharding(mesh, P(fsdp, "model" if d_ok else None))
+    return rules
+
+
+def logits_sharding(mesh: Mesh, cfg: ArchConfig) -> NamedSharding:
+    fsdp = fsdp_axes(mesh)
+    v_ok = cfg.vocab_size % mesh.shape["model"] == 0
+    return NamedSharding(mesh, P(fsdp, None, "model" if v_ok else None))

@@ -1,0 +1,10 @@
+from repro.hw.specs import TPU_V5E, ChipSpec, collective_time_s, compute_time_s, dim_efficiency, memory_time_s
+
+__all__ = [
+    "TPU_V5E",
+    "ChipSpec",
+    "collective_time_s",
+    "compute_time_s",
+    "dim_efficiency",
+    "memory_time_s",
+]

@@ -1,0 +1,62 @@
+"""Hardware constants for the target platform (TPU v5e) and roofline helpers.
+
+This container is CPU-only; v5e is the *target*. Every performance number in
+the framework (cost model, roofline terms) is derived from these constants,
+so they live in exactly one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float        # FLOP/s per chip
+    hbm_bandwidth: float          # bytes/s per chip
+    hbm_capacity: int             # bytes per chip
+    vmem_capacity: int            # bytes per core (usable budget for kernels)
+    ici_bandwidth: float          # bytes/s per link
+    ici_links: int                # links per chip (2D torus: 4)
+    mxu_dim: int = 128            # systolic array native dim
+    vreg_sublanes: int = 8        # native sublane count
+    vreg_lanes: int = 128         # native lane count
+    kernel_launch_overhead_s: float = 2e-6
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,       # 197 TFLOP/s bf16 (assignment constant)
+    hbm_bandwidth=819e9,          # 819 GB/s (assignment constant)
+    hbm_capacity=16 * 1024**3,    # 16 GiB
+    vmem_capacity=96 * 1024**2,   # 96 MiB usable of 128 MiB (pipeline margin)
+    ici_bandwidth=50e9,           # ~50 GB/s per link (assignment constant)
+    ici_links=4,
+)
+
+
+def compute_time_s(flops: float, chips: int = 1, spec: ChipSpec = TPU_V5E) -> float:
+    return flops / (chips * spec.peak_flops_bf16)
+
+
+def memory_time_s(bytes_: float, chips: int = 1, spec: ChipSpec = TPU_V5E) -> float:
+    return bytes_ / (chips * spec.hbm_bandwidth)
+
+
+def collective_time_s(bytes_: float, chips: int = 1, spec: ChipSpec = TPU_V5E) -> float:
+    # Per the assignment: collective_bytes / (chips * link_bw).
+    return bytes_ / (chips * spec.ici_bandwidth)
+
+
+def dim_efficiency(block: int, native: int) -> float:
+    """Fraction of a hardware-native tile that a block of size `block` fills.
+
+    A block of 96 on a native-128 unit wastes 25% of the lanes: eff = 96/128.
+    Blocks larger than native are penalized only by their remainder tile.
+    """
+    if block <= 0:
+        return 0.0
+    import math
+
+    padded = math.ceil(block / native) * native
+    return block / padded

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) for the compute hot-spots,
+with ``ops.py`` schedule-aware wrappers and ``ref.py`` pure-jnp oracles."""

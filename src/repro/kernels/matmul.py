@@ -1,0 +1,245 @@
+"""Schedule-driven Pallas matmul kernel (fused epilogues).
+
+The kernel realizes a :class:`repro.core.schedule.ConcreteSchedule` on TPU:
+
+* ``tiles``      → BlockSpec block shapes (bm, bn, bk);
+* ``order``      → grid axis order (Pallas iterates the last grid dim
+                    fastest, i.e. ``order[-1]`` is the innermost loop);
+* ``cache_write``→ f32 VMEM scratch accumulator (requires the reduction axis
+                    K innermost so the scratch survives the whole K trip);
+                    otherwise partial sums are accumulated into the output
+                    block (read-modify-write on revisits — the spill traffic
+                    the cost model charges for non-K-inner orders);
+* ``parallel``   → ``dimension_semantics`` prefix (TPU compiler hint);
+* epilogues (bias/gelu/glu/residual/softcap) are applied on the final
+  reduction step, inside the kernel.
+
+GLU epilogues use *interleaved* packing — columns alternate (gate, up) — so
+one N-block holds complete pairs and can emit its (bm, bn/2) output block
+independently.  Shape-changing epilogues therefore require the scratch-
+accumulator path (enforced in :func:`build_call`).
+
+Validated against :mod:`repro.kernels.ref` in interpret mode (tests sweep
+shapes × dtypes × schedules).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import ConcreteSchedule
+
+SHAPE_CHANGING = ("matmul_silu_glu", "matmul_gelu_glu", "moe_gemm_silu_glu")
+
+
+def _epilogue_fn(class_id: str, softcap: float) -> Callable[..., jax.Array]:
+    def f(acc, bias=None, residual=None):
+        y = acc
+        if bias is not None:
+            y = y + bias
+        if class_id == "matmul_bias_gelu":
+            y = jax.nn.gelu(y)
+        elif class_id in ("matmul_silu_glu", "moe_gemm_silu_glu"):
+            y = jax.nn.silu(y[:, 0::2]) * y[:, 1::2]
+        elif class_id == "matmul_gelu_glu":
+            y = jax.nn.gelu(y[:, 0::2]) * y[:, 1::2]
+        elif class_id == "matmul_residual":
+            y = y + residual
+        elif class_id == "matmul_lmhead_softcap":
+            y = jnp.tanh(y / softcap) * softcap
+        return y
+
+    return f
+
+
+def _kernel(x_ref, w_ref, *rest, class_id: str, softcap: float, k_pos: int,
+            k_trips: int, use_scratch: bool, has_bias: bool, has_residual: bool,
+            out_dtype):
+    """Kernel body shared by all matmul classes.
+
+    rest = (*optional bias_ref, *optional residual_ref, o_ref, *optional acc_ref)
+    """
+    i = 0
+    bias_ref = rest[i] if has_bias else None
+    i += int(has_bias)
+    residual_ref = rest[i] if has_residual else None
+    i += int(has_residual)
+    o_ref = rest[i]
+    acc_ref = rest[i + 1] if use_scratch else None
+
+    k_idx = pl.program_id(k_pos)
+    epilogue = _epilogue_fn(class_id, softcap)
+    partial = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    def emit(acc):
+        bias = bias_ref[...].astype(jnp.float32) if bias_ref is not None else None
+        res = residual_ref[...].astype(jnp.float32) if residual_ref is not None else None
+        o_ref[...] = epilogue(acc, bias, res).astype(out_dtype)
+
+    if use_scratch:
+        @pl.when(k_idx == 0)
+        def _():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += partial
+
+        @pl.when(k_idx == k_trips - 1)
+        def _():
+            emit(acc_ref[...])
+    else:
+        if k_trips == 1:
+            emit(partial)
+        else:
+            # read-modify-write accumulation in the output block (out dtype)
+            @pl.when(k_idx == 0)
+            def _():
+                o_ref[...] = partial.astype(out_dtype)
+
+            @pl.when((k_idx > 0) & (k_idx < k_trips - 1))
+            def _():
+                o_ref[...] = (o_ref[...].astype(jnp.float32) + partial).astype(out_dtype)
+
+            @pl.when(k_idx == k_trips - 1)
+            def _():
+                emit(o_ref[...].astype(jnp.float32) + partial)
+
+
+def build_call(
+    m: int,
+    n: int,
+    k: int,
+    cs: ConcreteSchedule,
+    *,
+    class_id: str = "matmul",
+    softcap: float = 0.0,
+    has_bias: bool = False,
+    has_residual: bool = False,
+    groups: int = 0,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    """Build a pallas_call for x:(M,K) @ w:(K,N) (+epilogue inputs) -> out.
+
+    ``groups`` > 0 builds the grouped (MoE) variant: x:(E,M,K), w:(E,K,N).
+    Shape-changing (GLU) epilogues emit N//2 columns.
+    """
+    bm, bn, bk = cs.t["M"], cs.t["N"], cs.t["K"]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    order = [a for a in cs.order if a in ("M", "N", "K")]
+    trips = {"M": pl.cdiv(m, bm), "N": pl.cdiv(n, bn), "K": pl.cdiv(k, bk)}
+    shape_changing = class_id in SHAPE_CHANGING
+    use_scratch = cs.schedule.cache_write and order[-1] == "K"
+    if shape_changing and not use_scratch:
+        # GLU epilogue cannot RMW through a differently-shaped output block.
+        if order[-1] != "K":
+            order = [a for a in order if a != "K"] + ["K"]
+            trips = {"M": pl.cdiv(m, bm), "N": pl.cdiv(n, bn), "K": pl.cdiv(k, bk)}
+        use_scratch = True
+    if shape_changing and bn % 2:
+        raise ValueError(f"GLU epilogue needs even N tile, got {bn}")
+
+    pos = {a: i for i, a in enumerate(order)}
+    g = int(groups > 0)  # leading expert grid dim for grouped matmul
+    grid = ((groups,) if g else ()) + tuple(trips[a] for a in order)
+
+    def idx(*axes):
+        def f(*pids):
+            base = {a: pids[g + pos[a]] for a in ("M", "N", "K")}
+            lead = (pids[0],) if g else ()
+            return lead + tuple(base[a] for a in axes)
+
+        return f
+
+    lead_blk = (1,) if g else ()
+    in_specs = [
+        pl.BlockSpec(lead_blk + (bm, bk), idx("M", "K")),
+        pl.BlockSpec(lead_blk + (bk, bn), idx("K", "N")),
+    ]
+    n_out = n // 2 if shape_changing else n
+    bn_out = bn // 2 if shape_changing else bn
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda *p: (0, p[g + pos["N"]])))
+    if has_residual:
+        in_specs.append(pl.BlockSpec(lead_blk + (bm, bn_out), idx("M", "N")))
+
+    out_specs = pl.BlockSpec(lead_blk + (bm, bn_out), idx("M", "N"))
+
+    kernel = functools.partial(
+        _kernel,
+        class_id=class_id,
+        softcap=softcap,
+        k_pos=g + pos["K"],
+        k_trips=trips["K"],
+        use_scratch=use_scratch,
+        has_bias=has_bias,
+        has_residual=has_residual,
+        out_dtype=out_dtype,
+    )
+
+    def _squeeze_lead(body):
+        # grouped blocks carry a leading length-1 expert dim; strip it inside
+        if not g:
+            return body
+
+        def wrapped(x_ref, w_ref, *rest):
+            refs = [x_ref.at[0], w_ref.at[0]]
+            i = 0
+            if has_bias:
+                refs.append(rest[i])
+                i += 1
+            if has_residual:
+                refs.append(rest[i].at[0])
+                i += 1
+            refs.append(rest[i].at[0])  # o_ref
+            refs.extend(rest[i + 1:])   # scratch
+            return body(*refs)
+
+        return wrapped
+
+    out_shape = jax.ShapeDtypeStruct(((groups,) if g else ()) + (m, n_out), out_dtype)
+    return pl.pallas_call(
+        _squeeze_lead(kernel),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)] if use_scratch else [],
+        interpret=interpret,
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array, cs: ConcreteSchedule, *,
+           class_id: str = "matmul", bias: jax.Array | None = None,
+           residual: jax.Array | None = None, softcap: float = 0.0,
+           interpret: bool = True) -> jax.Array:
+    """Run the kernel: x (M,K) @ w (K,N) with fused epilogue."""
+    m, k = x.shape
+    n = w.shape[1]
+    call = build_call(
+        m, n, k, cs, class_id=class_id, softcap=softcap,
+        has_bias=bias is not None, has_residual=residual is not None,
+        out_dtype=x.dtype, interpret=interpret,
+    )
+    args = [x, w]
+    if bias is not None:
+        args.append(bias.reshape(1, -1))
+    if residual is not None:
+        args.append(residual)
+    return call(*args)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, cs: ConcreteSchedule, *,
+                   class_id: str = "moe_gemm", interpret: bool = True) -> jax.Array:
+    """Grouped (MoE expert) matmul: x (E,M,K) @ w (E,K,N) -> (E,M,out)."""
+    e, m, k = x.shape
+    n = w.shape[2]
+    call = build_call(
+        m, n, k, cs, class_id=class_id, groups=e, out_dtype=x.dtype,
+        interpret=interpret,
+    )
+    return call(x, w)

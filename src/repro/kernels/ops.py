@@ -1,0 +1,190 @@
+"""Public kernel ops: schedule-aware, backend-dispatching wrappers.
+
+Models call these instead of raw jnp so tuned schedules (native or
+transfer-tuned) plumb into execution as a first-class feature:
+
+* ``backend="ref"``    — pure-jnp oracle path (XLA).  Default on CPU/this
+  container; also the dry-run path, so `.lower()` sees the same sub-
+  quadratic structure the Pallas kernels have (chunked attention).
+* ``backend="pallas"`` — the Pallas kernels, realizing the resolved
+  :class:`ConcreteSchedule` as BlockSpecs.  On CPU this runs in interpret
+  mode (functionally exact, used by the tests); on TPU it compiles.
+
+Schedule resolution: a :class:`ScheduleProvider` built from a tuned
+:class:`~repro.core.database.ScheduleDB` / transfer-tuning result maps each
+runtime kernel instance to its best schedule (exact workload hit → class
+transfer → untuned default), mirroring the lookup order of the paper.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import ConcreteSchedule, Schedule, ScheduleInvalid, concretize, default_schedule
+from repro.core.workload import KernelInstance
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import ref
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _rw
+
+_state = threading.local()
+
+
+def _default_backend() -> str:
+    return getattr(_state, "backend", "ref")
+
+
+def set_backend(backend: str) -> None:
+    assert backend in ("ref", "pallas")
+    _state.backend = backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+    prev = _default_backend()
+    set_backend(backend)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+class ScheduleProvider:
+    """Resolves the schedule for each kernel instance the model emits.
+
+    ``schedule_map``: workload_key -> Schedule (e.g. from
+    TransferResult.schedule_map() or native tuning records).  Lookup order:
+    exact workload hit → validated as-is; otherwise the untuned default.
+    Invalid entries (e.g. a transferred schedule that does not concretize
+    strictly) fall back to the default — execution never fails on a bad DB.
+    """
+
+    def __init__(self, schedule_map: Mapping[str, Schedule] | None = None,
+                 mode: str = "strict"):
+        self.schedule_map = dict(schedule_map or {})
+        self.mode = mode
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, instance: KernelInstance) -> ConcreteSchedule:
+        sched = self.schedule_map.get(instance.workload_key())
+        if sched is not None:
+            try:
+                cs = concretize(sched, instance, mode=self.mode)
+                self.hits += 1
+                return cs
+            except ScheduleInvalid:
+                pass
+        self.misses += 1
+        return concretize(default_schedule(instance), instance)
+
+
+_DEFAULT_PROVIDER = ScheduleProvider()
+
+
+def _resolve(provider: ScheduleProvider | None) -> ScheduleProvider:
+    return provider if provider is not None else _DEFAULT_PROVIDER
+
+
+# ---------------------------------------------------------------------------
+# matmul family
+# ---------------------------------------------------------------------------
+
+
+def matmul(x: jax.Array, w: jax.Array, *, class_id: str = "matmul",
+           bias: jax.Array | None = None, residual: jax.Array | None = None,
+           softcap: float = 0.0, provider: ScheduleProvider | None = None,
+           backend: str | None = None) -> jax.Array:
+    """x: (..., K) @ w: (K, N) with fused epilogue. GLU classes emit N//2."""
+    backend = backend or _default_backend()
+    *lead, k = x.shape
+    n = w.shape[1]
+    if backend == "ref":
+        return ref.matmul(x, w, class_id, bias=bias, residual=residual, softcap=softcap)
+    m = 1
+    for s in lead:
+        m *= s
+    x2 = x.reshape(m, k)
+    res2 = residual.reshape(m, -1) if residual is not None else None
+    inst = KernelInstance.make(class_id, M=m, N=n, K=k, dtype=str(x.dtype))
+    cs = _resolve(provider).get(inst)
+    y = _mm.matmul(x2, w, cs, class_id=class_id, bias=bias, residual=res2,
+                   softcap=softcap, interpret=_interpret())
+    return y.reshape(*lead, y.shape[-1])
+
+
+def moe_gemm(x: jax.Array, w: jax.Array, *, class_id: str = "moe_gemm",
+             provider: ScheduleProvider | None = None,
+             backend: str | None = None) -> jax.Array:
+    """Grouped expert GEMM: x (E, M, K) @ w (E, K, N)."""
+    backend = backend or _default_backend()
+    if backend == "ref":
+        return jax.vmap(lambda a, b: ref.matmul(a, b, class_id))(x, w)
+    e, m, k = x.shape
+    n = w.shape[2]
+    inst = KernelInstance.make(class_id, M=m * e, N=n, K=k, E=e, dtype=str(x.dtype))
+    cs = _resolve(provider).get(inst)
+    return _mm.grouped_matmul(x, w, cs, class_id=class_id, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    class_id: str = "flash_attention_causal",
+                    causal: bool = True, window: int = 0, softcap: float = 0.0,
+                    q_offset: int = 0, provider: ScheduleProvider | None = None,
+                    backend: str | None = None, chunk: int = 1024) -> jax.Array:
+    """q: (B,Hq,Sq,D); k/v: (B,Hkv,Skv,D) — GQA-aware flash attention."""
+    backend = backend or _default_backend()
+    if backend == "ref":
+        return ref.chunked_attention(q, k, v, causal=causal, window=window,
+                                     softcap=softcap, q_offset=q_offset, chunk=chunk)
+    b, hq, sq, d = q.shape
+    inst = KernelInstance.make(class_id, Q=sq, KV=k.shape[2], H=hq, D=d, B=b,
+                               window=window, dtype=str(q.dtype))
+    cs = _resolve(provider).get(inst)
+    return _fa.flash_attention(q, k, v, cs, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset,
+                               interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# recurrent scans
+# ---------------------------------------------------------------------------
+
+
+def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+          state: jax.Array, *, provider: ScheduleProvider | None = None,
+          backend: str | None = None) -> tuple[jax.Array, jax.Array]:
+    backend = backend or _default_backend()
+    if backend == "ref":
+        return ref.rwkv6_scan(r, k, v, w, u, state)
+    b, h, t, d = r.shape
+    inst = KernelInstance.make("rwkv6_scan", T=t, C=h * d, D=d, B=b, dtype=str(r.dtype))
+    cs = _resolve(provider).get(inst)
+    return _rw.rwkv6_scan(r, k, v, w, u, state, cs, interpret=_interpret())
+
+
+def rglru(x: jax.Array, a: jax.Array, state: jax.Array, *,
+          provider: ScheduleProvider | None = None,
+          backend: str | None = None) -> tuple[jax.Array, jax.Array]:
+    backend = backend or _default_backend()
+    if backend == "ref":
+        return ref.rglru_scan(x, a, state)
+    b, t, c = x.shape
+    inst = KernelInstance.make("rglru_scan", T=t, C=c, B=b, dtype=str(x.dtype))
+    cs = _resolve(provider).get(inst)
+    return _rg.rglru_scan(x, a, state, cs, interpret=_interpret())
+
+
+def _interpret() -> bool:
+    """Pallas interpret mode: on unless a real TPU backend is present."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,77 @@
+"""Schedule-driven Pallas RG-LRU kernel (Griffin / RecurrentGemma).
+
+Diagonal linear recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ x_t —
+memory-bound and embarrassingly parallel over channels, sequential over
+time.  Schedule axes: ``T`` time-chunk and ``C`` channel block: the channel
+grid axis is parallel; the f32 state scratch (one row per channel block)
+persists across the sequential T trip.
+
+Grid: (B, C/bc, T/ct) — T innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import ConcreteSchedule
+
+
+def _kernel(x_ref, a_ref, h0_ref, y_ref, hT_ref, h_ref, *, t_trips: int, out_dtype):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)  # (ct, bc)
+    a = a_ref[0].astype(jnp.float32)
+
+    def step(h, xs):
+        xt, at = xs
+        h_new = at * h + jnp.sqrt(jnp.maximum(1.0 - at * at, 0.0)) * xt
+        return h_new, h_new
+
+    h_final, ys = jax.lax.scan(step, h_ref[0], (x, a))
+    h_ref[...] = h_final[None]
+    y_ref[0] = ys.astype(out_dtype)
+
+    @pl.when(ti == t_trips - 1)
+    def _():
+        hT_ref[0] = h_final
+
+
+def rglru_scan(x: jax.Array, a: jax.Array, state: jax.Array,
+               cs: ConcreteSchedule, *, interpret: bool = True
+               ) -> tuple[jax.Array, jax.Array]:
+    """x, a: (B, T, C); state: (B, C) f32. Returns (y, state_out)."""
+    b, t, c = x.shape
+    ct = min(cs.t["T"], t)
+    bc = min(cs.t["C"], c)
+    grid = (b, pl.cdiv(c, bc), pl.cdiv(t, ct))
+
+    in_specs = [
+        pl.BlockSpec((1, ct, bc), lambda bi, ci, ti: (bi, ti, ci)),
+        pl.BlockSpec((1, ct, bc), lambda bi, ci, ti: (bi, ti, ci)),
+        pl.BlockSpec((1, bc), lambda bi, ci, ti: (bi, ci)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, ct, bc), lambda bi, ci, ti: (bi, ti, ci)),
+        pl.BlockSpec((1, bc), lambda bi, ci, ti: (bi, ci)),
+    ]
+    y, h_out = pl.pallas_call(
+        functools.partial(_kernel, t_trips=grid[2], out_dtype=x.dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, c), x.dtype),
+            jax.ShapeDtypeStruct((b, c), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)],
+        interpret=interpret,
+    )(x, a, state)
+    return y, h_out

@@ -1,0 +1,98 @@
+"""Schedule-driven Pallas RWKV6 (Finch) wkv time-mix kernel.
+
+The wkv recurrence is the sequential hot-spot of RWKV6: per (batch, head)
+a (D×D) state is decayed per-channel (data-dependent ``w``) and updated
+with rank-1 outer products.  TPU adaptation: the state lives in an f32 VMEM
+scratch that persists across the sequential time-chunk grid axis; tokens
+inside a chunk run in a ``lax.scan`` over VMEM-resident slices.
+
+Schedule axes: ``T`` (time-chunk length, tiles the sequential axis — larger
+chunks amortize DMA, cost VMEM) and ``C`` (channel/head blocking — here the
+grid over batch·heads; the C tile gates how many heads share one program).
+
+Grid: (B·H, T/ct) — T innermost so the state scratch survives the trip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import ConcreteSchedule
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_ref, *,
+            t_trips: int, out_dtype):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)  # (ct, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (D,) bonus, broadcast over k-dim
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (D,) each
+        kv = kt[:, None] * vt[None, :]                      # (D, D)
+        y = rt @ (s + u[:, None] * kv)                      # (D,)
+        s_new = wt[:, None] * s + kv
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(step, s_ref[...], (r, k, v, w))
+    s_ref[...] = s_final
+    y_ref[0] = ys.astype(out_dtype)
+
+    @pl.when(ti == t_trips - 1)
+    def _():
+        sT_ref[0] = s_final
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, state: jax.Array, cs: ConcreteSchedule, *,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """r/k/v/w: (B, H, T, D); u: (H, D); state: (B, H, D, D) f32.
+
+    Returns (y: (B, H, T, D), state_out: (B, H, D, D) f32).
+    """
+    b, h, t, d = r.shape
+    ct = min(cs.t["T"], t)
+    grid = (b * h, pl.cdiv(t, ct))
+
+    def flat(x):
+        return x.reshape(b * h, t, d)
+
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)
+    sf = state.reshape(b * h, d, d)
+
+    in_specs = [
+        pl.BlockSpec((1, ct, d), lambda bh, ti: (bh, ti, 0)),
+        pl.BlockSpec((1, ct, d), lambda bh, ti: (bh, ti, 0)),
+        pl.BlockSpec((1, ct, d), lambda bh, ti: (bh, ti, 0)),
+        pl.BlockSpec((1, ct, d), lambda bh, ti: (bh, ti, 0)),
+        pl.BlockSpec((1, d), lambda bh, ti: (bh % h, 0)),       # u per head
+        pl.BlockSpec((1, d, d), lambda bh, ti: (bh, 0, 0)),     # initial state
+    ]
+    out_specs = [
+        pl.BlockSpec((1, ct, d), lambda bh, ti: (bh, ti, 0)),
+        pl.BlockSpec((1, d, d), lambda bh, ti: (bh, 0, 0)),
+    ]
+    y, s_out = pl.pallas_call(
+        functools.partial(_kernel, t_trips=grid[1], out_dtype=r.dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, t, d), r.dtype),
+            jax.ShapeDtypeStruct((b * h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, u, sf)
+    return y.reshape(b, h, t, d), s_out.reshape(b, h, d, d)

@@ -1,0 +1,76 @@
+"""Serving driver: batched inference with continuous batching.
+
+Loads a (reduced or full) arch, optionally a transfer-tuned schedule DB,
+and runs a stream of requests through the slot-based engine, reporting
+throughput and per-request latency.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.core.database import ScheduleDB
+from repro.kernels.ops import ScheduleProvider
+from repro.models.build import build_model
+from repro.serving import ServingEngine
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description="serve an assigned architecture")
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--tuning-db", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.preset == "smoke":
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    if args.tuning_db:
+        db = ScheduleDB.load(args.tuning_db)
+        ScheduleProvider({r.instance.workload_key(): r.schedule for r in db.records()})
+
+    extras = {}
+    if cfg.family == "audio":
+        extras["frames"] = np.zeros((cfg.encoder_seq, cfg.d_model), np.float32)
+    if cfg.vision_tokens:
+        extras["patch_embeds"] = np.zeros((cfg.vision_tokens, cfg.d_model), np.float32)
+
+    engine = ServingEngine(model, params, slots=args.slots, max_len=args.max_len,
+                           extras=extras)
+    rng = np.random.default_rng(0)
+    pending = [list(rng.integers(1, cfg.vocab_size, size=int(rng.integers(3, 9))))
+               for _ in range(args.requests)]
+    done, t0, steps = [], time.monotonic(), 0
+    while pending or engine.active:
+        while pending:
+            req = engine.add_request([int(t) for t in pending[0]],
+                                     max_new_tokens=args.new_tokens)
+            if req is None:
+                break
+            pending.pop(0)
+        done.extend(engine.step())
+        steps += 1
+        if steps > 10_000:
+            raise RuntimeError("serving did not converge")
+    dt = time.monotonic() - t0
+    toks = sum(len(r.generated) for r in done)
+    result = {"requests": len(done), "decode_steps": steps,
+              "tokens": toks, "tok_per_s": round(toks / dt, 1)}
+    print(json.dumps(result))
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.build import Model, build_model, input_specs
+
+__all__ = ["Model", "build_model", "input_specs"]

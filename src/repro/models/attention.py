@@ -1,0 +1,179 @@
+"""Attention blocks: GQA/MQA projections, RoPE, global + local/SWA variants,
+logit softcapping, and KV caches (full for global layers, ring buffer sized
+to the window for local/SWA layers — what makes long_500k decode feasible).
+
+Three entry points per layer kind:
+  * ``attn_forward``   — full-sequence (train / prefill), returns new cache
+  * ``attn_decode``    — single-token step against the cache
+  * ``init_attn_cache``
+
+All heavy math routes through :mod:`repro.kernels.ops` so tuned schedules
+(transfer-tuned or native) apply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.common import apply_norm, apply_rope, dense_init, dtype_of, norm_params
+
+
+def attn_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = dtype_of(cfg.dtype)
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dt),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dt),
+    }
+
+
+def _attn_class(cfg: ArchConfig, kind: str, cross: bool = False) -> str:
+    if cross:
+        return "flash_attention_cross"
+    if kind == "L":
+        return "flash_attention_swa" if len(set(cfg.layer_kinds)) == 1 else "flash_attention_local"
+    if cfg.attn_softcap > 0:
+        return "flash_attention_softcap"
+    return "flash_attention_causal"
+
+
+def _qkv(p: dict, cfg: ArchConfig, x: jax.Array, provider) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = ops.matmul(x, p["wq"], provider=provider).reshape(b, s, cfg.n_heads, hd)
+    k = ops.matmul(x, p["wk"], provider=provider).reshape(b, s, cfg.n_kv_heads, hd)
+    v = ops.matmul(x, p["wv"], provider=provider).reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _rope_qk(cfg: ArchConfig, q, k, positions):
+    if cfg.pos != "rope":
+        return q, k
+    return (apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_attn_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int) -> dict:
+    """Full cache for global layers; window-sized ring for local/SWA."""
+    size = max_len if (kind == "G" or cfg.window == 0) else min(cfg.window, max_len)
+    dt = dtype_of(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, size, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, size, cfg.head_dim), dt),
+    }
+
+
+def _cache_size(cache: dict) -> int:
+    return cache["k"].shape[2]
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def attn_forward(p: dict, cfg: ArchConfig, x: jax.Array, kind: str, *,
+                 positions: jax.Array, provider=None,
+                 cache: dict | None = None) -> tuple[jax.Array, dict | None]:
+    """x: (B, S, D) normalized input. Returns (attn_out, updated_cache)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, provider)
+    q = jnp.swapaxes(q, 1, 2)  # (B, H, S, hd)
+    k = jnp.swapaxes(k, 1, 2)
+    v = jnp.swapaxes(v, 1, 2)
+    q, k = _rope_qk(cfg, q, k, positions)
+
+    window = cfg.window if kind == "L" else 0
+    out = ops.flash_attention(
+        q, k, v,
+        class_id=_attn_class(cfg, kind),
+        causal=True,
+        window=window,
+        softcap=cfg.attn_softcap if kind == "G" else 0.0,
+        provider=provider,
+    )
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    y = ops.matmul(out, p["wo"], provider=provider)
+
+    new_cache = None
+    if cache is not None:
+        size = _cache_size(cache)
+        if size >= s:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+            }
+        else:  # ring prefill: keep last `size` positions, slot convention p % size
+            shift = (s - size) % size
+            new_cache = {
+                "k": jnp.roll(k[:, :, s - size:, :], shift, axis=2),
+                "v": jnp.roll(v[:, :, s - size:, :], shift, axis=2),
+            }
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against cache)
+# ---------------------------------------------------------------------------
+
+
+def attn_decode(p: dict, cfg: ArchConfig, x: jax.Array, kind: str, *,
+                pos: jax.Array, cache: dict, provider=None) -> tuple[jax.Array, dict]:
+    """x: (B, 1, D); pos: (B,) per-sequence absolute positions (continuous
+    batching: every slot may be at a different decode position)."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _qkv(p, cfg, x, provider)
+    q = jnp.swapaxes(q, 1, 2)   # (B, H, 1, hd)
+    k = jnp.swapaxes(k, 1, 2)   # (B, KV, 1, hd)
+    v = jnp.swapaxes(v, 1, 2)
+    q, k = _rope_qk(cfg, q, k, pos[:, None])
+
+    size = _cache_size(cache)
+    slot = jnp.where(size > pos, pos, pos % size)           # (B,) ring for local
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(cfg.n_kv_heads)[None, :]
+    ck = cache["k"].at[bi, hi, slot[:, None], :].set(k[:, :, 0, :].astype(cache["k"].dtype))
+    cv = cache["v"].at[bi, hi, slot[:, None], :].set(v[:, :, 0, :].astype(cache["v"].dtype))
+
+    window = cfg.window if kind == "L" else 0
+    slots = jnp.arange(size)[None, :]                       # (1, size)
+    if window and size <= window:
+        # Ring cache: live slots hold the last `size` (≤ window) positions,
+        # so the window constraint holds by construction; only not-yet-
+        # written slots (before the ring wraps) need masking.
+        valid = slots < jnp.minimum(pos + 1, size)[:, None]
+        out = _masked_decode_attention(q, ck, cv, valid, cfg)
+    else:
+        valid = slots <= pos[:, None]
+        out = _masked_decode_attention(q, ck, cv, valid, cfg,
+                                       softcap=cfg.attn_softcap if kind == "G" else 0.0)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    y = ops.matmul(out, p["wo"], provider=provider)
+    return y, {"k": ck, "v": cv}
+
+
+def _masked_decode_attention(q, k, v, valid_mask, cfg: ArchConfig, softcap: float = 0.0):
+    """Single-query attention over the whole cache with an explicit (B, size)
+    validity mask (handles causal prefix and ring-buffer semantics)."""
+    b, hq, _, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32) * d ** -0.5
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid_mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q.dtype)

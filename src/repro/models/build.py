@@ -1,0 +1,92 @@
+"""Model facade: one uniform interface over all 10 architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` bundling init / forward / loss /
+prefill / decode_step / init_cache / input_specs.  ``input_specs`` produces
+``jax.ShapeDtypeStruct`` stand-ins for every model input of a shape cell
+(the dry-run contract: weak-type-correct, shardable, no allocation) — for
+[audio]/[vlm] archs this is where the stub frontend lives (precomputed
+frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.common import dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., tuple[jax.Array, jax.Array]]
+    loss_fn: Callable[..., tuple[jax.Array, dict]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_cache: Callable[[int, int], Any]
+
+    def input_specs(self, shape: ShapeConfig, *, batch_override: int | None = None) -> dict:
+        return input_specs(self.cfg, shape, batch_override=batch_override)
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            forward=lambda p, batch, **kw: encdec.forward(p, cfg, batch, **kw),
+            loss_fn=lambda p, batch, **kw: encdec.loss_fn(p, cfg, batch, **kw),
+            prefill=lambda p, batch, **kw: encdec.prefill(p, cfg, batch, **kw),
+            decode_step=lambda p, cache, tok, **kw: encdec.decode_step(p, cfg, cache, tok, **kw),
+            init_cache=lambda b, n: encdec.init_cache(cfg, b, n),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.init_params(key, cfg),
+        forward=lambda p, batch, **kw: lm.forward(p, cfg, batch, **kw),
+        loss_fn=lambda p, batch, **kw: lm.loss_fn(p, cfg, batch, **kw),
+        prefill=lambda p, batch, **kw: lm.prefill(p, cfg, batch, **kw),
+        decode_step=lambda p, cache, tok, **kw: lm.decode_step(p, cfg, cache, tok, **kw),
+        init_cache=lambda b, n: lm.init_cache(cfg, b, n),
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for one shape cell's model inputs.
+
+    train/prefill: token batch (+ stub modality embeddings);
+    decode: one token per sequence + the KV/recurrent cache of length seq_len.
+    """
+    b = batch_override if batch_override is not None else shape.global_batch
+    s = shape.seq_len
+    act = dtype_of(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        specs: dict[str, Any] = {}
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), act)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        elif cfg.vision_tokens:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model), act)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.vision_tokens), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+
+    # decode: one new token against a cache of seq_len context
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32), "cache": cache}

@@ -1,0 +1,226 @@
+"""Encoder-decoder model (whisper-medium backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, encoder_seq, D).  Encoder = bidirectional
+attention blocks; decoder = causal self-attention + cross-attention blocks.
+Serving: cross K/V are computed once at prefill and reused every decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import constrain, remat_policy
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models.common import apply_norm, dense_init, dtype_of, embed_init, norm_params
+
+MAX_DECODE_POS = 32768  # learned position table size (≥ decode_32k cell)
+
+
+def _enc_block_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = dtype_of(cfg.dtype)
+    return {
+        "ln1": norm_params(cfg.d_model, cfg.norm, dt),
+        "attn": attn.attn_params(k1, cfg),
+        "ln2": norm_params(cfg.d_model, cfg.norm, dt),
+        "mlp": mlpm.mlp_params(k2, cfg),
+    }
+
+
+def _dec_block_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = dtype_of(cfg.dtype)
+    return {
+        "ln1": norm_params(cfg.d_model, cfg.norm, dt),
+        "self_attn": attn.attn_params(k1, cfg),
+        "ln_x": norm_params(cfg.d_model, cfg.norm, dt),
+        "cross_attn": attn.attn_params(k2, cfg),
+        "ln2": norm_params(cfg.d_model, cfg.norm, dt),
+        "mlp": mlpm.mlp_params(k3, cfg),
+    }
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg.dtype)
+    enc_layers = [_enc_block_params(k, cfg) for k in jax.random.split(ks[0], cfg.encoder_layers)]
+    dec_layers = [_dec_block_params(k, cfg) for k in jax.random.split(ks[1], cfg.n_layers)]
+    stack = lambda ls: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ls)
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dt),
+        "enc_pos": (jax.random.normal(ks[3], (cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.01).astype(dt),
+        "dec_pos": (jax.random.normal(ks[4], (MAX_DECODE_POS, cfg.d_model), jnp.float32) * 0.01).astype(dt),
+        "encoder": stack(enc_layers),
+        "enc_norm": norm_params(cfg.d_model, cfg.norm, dt),
+        "decoder": stack(dec_layers),
+        "final_norm": norm_params(cfg.d_model, cfg.norm, dt),
+        "lm_head": dense_init(ks[5], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array, *, remat: bool = True,
+           provider=None) -> jax.Array:
+    """frames: (B, enc_seq, D) stub embeddings -> encoder hidden states."""
+    h = frames.astype(dtype_of(cfg.dtype)) + params["enc_pos"][None, : frames.shape[1]]
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(hh, p):
+        xn = apply_norm(p["ln1"], hh, cfg.norm)
+        q = ops.matmul(xn, p["attn"]["wq"], provider=provider).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = ops.matmul(xn, p["attn"]["wk"], provider=provider).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = ops.matmul(xn, p["attn"]["wv"], provider=provider).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        tr = lambda x: jnp.swapaxes(x, 1, 2)
+        o = ops.flash_attention(tr(q), tr(k), tr(v), class_id="flash_attention_bidir",
+                                causal=False, provider=provider)
+        o = jnp.swapaxes(o, 1, 2).reshape(b, s, -1)
+        hh = hh + ops.matmul(o, p["attn"]["wo"], provider=provider)
+        xn2 = apply_norm(p["ln2"], hh, cfg.norm)
+        hh = hh + mlpm.mlp_apply(p["mlp"], cfg, xn2, provider=provider)
+        return constrain(hh), None
+
+    fn = jax.checkpoint(body, policy=remat_policy()) if remat else body
+    h, _ = jax.lax.scan(fn, h, params["encoder"])
+    return apply_norm(params["enc_norm"], h, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _cross_attend(p: dict, cfg: ArchConfig, x: jax.Array, ck: jax.Array,
+                  cv: jax.Array, provider=None) -> jax.Array:
+    """x: (B, S, D) attends to precomputed cross K/V (B, Hkv, Senc, hd)."""
+    b, s, _ = x.shape
+    q = ops.matmul(x, p["wq"], provider=provider).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    o = ops.flash_attention(jnp.swapaxes(q, 1, 2), ck, cv,
+                            class_id="flash_attention_cross", causal=False,
+                            provider=provider)
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, -1)
+    return ops.matmul(o, p["wo"], provider=provider)
+
+
+def _cross_kv(p: dict, cfg: ArchConfig, enc: jax.Array, provider=None):
+    b, s, _ = enc.shape
+    k = ops.matmul(enc, p["wk"], provider=provider).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = ops.matmul(enc, p["wv"], provider=provider).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict, *, remat: bool = True,
+            provider=None) -> tuple[jax.Array, jax.Array]:
+    """batch: frames (B, enc_seq, D) + tokens (B, S). Returns (logits, aux=0)."""
+    enc = encode(params, cfg, batch["frames"], remat=remat, provider=provider)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = params["embed"][tokens] + params["dec_pos"][None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(hh, p):
+        xn = apply_norm(p["ln1"], hh, cfg.norm)
+        a, _ = attn.attn_forward(p["self_attn"], cfg, xn, "G", positions=positions,
+                                 provider=provider)
+        hh = hh + a
+        xc = apply_norm(p["ln_x"], hh, cfg.norm)
+        ck, cv = _cross_kv(p["cross_attn"], cfg, enc, provider=provider)
+        hh = hh + _cross_attend(p["cross_attn"], cfg, xc, ck, cv, provider=provider)
+        xn2 = apply_norm(p["ln2"], hh, cfg.norm)
+        hh = hh + mlpm.mlp_apply(p["mlp"], cfg, xn2, provider=provider)
+        return constrain(hh), None
+
+    fn = jax.checkpoint(body, policy=remat_policy()) if remat else body
+    h, _ = jax.lax.scan(fn, h, params["decoder"])
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = ops.matmul(h, params["lm_head"], class_id="matmul_lmhead", provider=provider)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict, *, remat: bool = True,
+            provider=None) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, cfg, batch, remat=remat, provider=provider)
+    tgt = batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1).squeeze(-1)
+    ce = nll.mean()
+    return ce, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: dict, cfg: ArchConfig, batch: dict, *, max_len: int,
+            provider=None) -> tuple[jax.Array, dict]:
+    enc = encode(params, cfg, batch["frames"], remat=False, provider=provider)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = params["embed"][tokens] + params["dec_pos"][None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(hh, p):
+        xn = apply_norm(p["ln1"], hh, cfg.norm)
+        c0 = attn.init_attn_cache(cfg, "G", b, max_len)
+        a, c = attn.attn_forward(p["self_attn"], cfg, xn, "G", positions=positions,
+                                 cache=c0, provider=provider)
+        hh = hh + a
+        xc = apply_norm(p["ln_x"], hh, cfg.norm)
+        ck, cv = _cross_kv(p["cross_attn"], cfg, enc, provider=provider)
+        hh = hh + _cross_attend(p["cross_attn"], cfg, xc, ck, cv, provider=provider)
+        xn2 = apply_norm(p["ln2"], hh, cfg.norm)
+        hh = hh + mlpm.mlp_apply(p["mlp"], cfg, xn2, provider=provider)
+        return constrain(hh), {"self": c, "cross_k": ck, "cross_v": cv}
+
+    h, caches = jax.lax.scan(body, h, params["decoder"])
+    h = apply_norm(params["final_norm"], h[:, -1:, :], cfg.norm)
+    logits = ops.matmul(h, params["lm_head"], class_id="matmul_lmhead", provider=provider)
+    return logits[:, 0, :], {"layers": caches, "t": jnp.full((b,), s, jnp.int32)}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Decode cache specs (self KV per layer + precomputed cross KV)."""
+    dt = dtype_of(cfg.dtype)
+    per_layer = {
+        "self": attn.init_attn_cache(cfg, "G", batch, max_len),
+        "cross_k": jnp.zeros((batch, cfg.n_kv_heads, cfg.encoder_seq, cfg.head_dim), dt),
+        "cross_v": jnp.zeros((batch, cfg.n_kv_heads, cfg.encoder_seq, cfg.head_dim), dt),
+    }
+    layers = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), per_layer
+    )
+    return {"layers": layers, "t": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict, tokens: jax.Array, *,
+                provider=None) -> tuple[jax.Array, dict]:
+    pos = cache["t"]                                   # (B,) per-slot positions
+    b = tokens.shape[0]
+    h = params["embed"][tokens[:, None]] + params["dec_pos"][pos][:, None, :]
+
+    def body(hh, xs):
+        p, c = xs
+        xn = apply_norm(p["ln1"], hh, cfg.norm)
+        a, c_self = attn.attn_decode(p["self_attn"], cfg, xn, "G", pos=pos,
+                                     cache=c["self"], provider=provider)
+        hh = hh + a
+        xc = apply_norm(p["ln_x"], hh, cfg.norm)
+        hh = hh + _cross_attend(p["cross_attn"], cfg, xc, c["cross_k"], c["cross_v"],
+                                provider=provider)
+        xn2 = apply_norm(p["ln2"], hh, cfg.norm)
+        hh = hh + mlpm.mlp_apply(p["mlp"], cfg, xn2, provider=provider)
+        return hh, {"self": c_self, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    h, layers = jax.lax.scan(body, h, (params["decoder"], cache["layers"]))
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = ops.matmul(h, params["lm_head"], class_id="matmul_lmhead", provider=provider)
+    return logits[:, 0, :], {"layers": layers, "t": pos + 1}

@@ -1,0 +1,314 @@
+"""Decoder-only LM stack covering dense / MoE / SSM / hybrid / VLM families.
+
+Layers follow ``cfg.layer_pattern`` (e.g. gemma2 ("L","G"), griffin
+("R","R","L")).  The stack is executed as ``jax.lax.scan`` over *pattern
+groups* — params are stacked with leading dim = full pattern repeats — plus
+explicit tail layers for the remainder (griffin's 26 = 8×3 + 2).  Scan keeps
+the HLO (and compile time) independent of depth; the group body is wrapped
+in ``jax.checkpoint`` for training (save-residual-boundaries remat policy).
+
+Three entry points (built per-config by :mod:`repro.models.build`):
+  forward(params, batch)          — full-sequence logits (+aux), train/eval
+  prefill(params, batch, max_len) — logits of last position + filled cache
+  decode_step(params, cache, tok) — one token, updated cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import constrain, remat_policy
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import recurrent as rec
+from repro.models.common import apply_norm, dense_init, dtype_of, embed_init, norm_params
+
+
+# ---------------------------------------------------------------------------
+# Per-block params / apply
+# ---------------------------------------------------------------------------
+
+
+def block_params(key: jax.Array, cfg: ArchConfig, kind: str) -> dict:
+    if kind == "R":
+        if cfg.family == "ssm":
+            return rec.rwkv_params(key, cfg)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "ln1": norm_params(cfg.d_model, cfg.norm, dtype_of(cfg.dtype)),
+            "rnn": rec.griffin_params(k1, cfg),
+            "ln2": norm_params(cfg.d_model, cfg.norm, dtype_of(cfg.dtype)),
+            "mlp": mlpm.mlp_params(k2, cfg),
+        }
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": norm_params(cfg.d_model, cfg.norm, dtype_of(cfg.dtype)),
+        "attn": attn.attn_params(k1, cfg),
+        "ln2": norm_params(cfg.d_model, cfg.norm, dtype_of(cfg.dtype)),
+    }
+    if cfg.n_experts > 0:
+        p["moe"] = mlpm.moe_params(k2, cfg)
+    else:
+        p["mlp"] = mlpm.mlp_params(k2, cfg)
+    return p
+
+
+def apply_block(p: dict, cfg: ArchConfig, kind: str, x: jax.Array, *,
+                positions: jax.Array | None, pos: jax.Array | None,
+                cache: dict | None, decode: bool, provider=None
+                ) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "R":
+        if cfg.family == "ssm":
+            x, c = rec.rwkv_block(p, cfg, x, cache=cache, provider=provider)
+            return x, c, aux
+        xn = apply_norm(p["ln1"], x, cfg.norm)
+        out, c = rec.griffin_block(p["rnn"], cfg, xn, cache=cache, provider=provider)
+        x = constrain(x + out)
+        xn2 = apply_norm(p["ln2"], x, cfg.norm)
+        x = constrain(x + mlpm.mlp_apply(p["mlp"], cfg, xn2, provider=provider))
+        return x, c, aux
+
+    xn = apply_norm(p["ln1"], x, cfg.norm)
+    if decode:
+        a, c = attn.attn_decode(p["attn"], cfg, xn, kind, pos=pos, cache=cache,
+                                provider=provider)
+    else:
+        a, c = attn.attn_forward(p["attn"], cfg, xn, kind, positions=positions,
+                                 cache=cache, provider=provider)
+    # constrain the residual after every sub-block: otherwise GSPMD
+    # replicates intermediate residuals inside multi-layer pattern groups
+    # and pays full all-reduces instead of staying D-sharded (§Perf it-6)
+    x = constrain(x + a)
+    xn2 = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.n_experts > 0:
+        y, aux = mlpm.moe_apply(p["moe"], cfg, xn2, provider=provider)
+        x = constrain(x + y)
+    else:
+        x = constrain(x + mlpm.mlp_apply(p["mlp"], cfg, xn2, provider=provider))
+    return x, c, aux
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int) -> dict:
+    if kind == "R":
+        if cfg.family == "ssm":
+            return rec.init_rwkv_cache(cfg, batch)
+        return rec.init_griffin_cache(cfg, batch)
+    return attn.init_attn_cache(cfg, kind, batch, max_len)
+
+
+# ---------------------------------------------------------------------------
+# Stack construction
+# ---------------------------------------------------------------------------
+
+
+def _pattern_split(cfg: ArchConfig) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    pat = cfg.layer_pattern
+    reps, rem = divmod(cfg.n_layers, len(pat))
+    return pat, reps, pat[:rem]
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    pat, reps, tail = _pattern_split(cfg)
+    keys = jax.random.split(key, 8)
+    dt = dtype_of(cfg.dtype)
+    params: dict[str, Any] = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt)}
+    if cfg.vision_tokens:
+        params["vis_proj"] = dense_init(keys[1], cfg.d_model, cfg.d_model, dt)
+
+    group: dict[str, Any] = {}
+    gkeys = jax.random.split(keys[2], max(reps, 1) * len(pat)).reshape(max(reps, 1), len(pat), 2)
+    for i, kind in enumerate(pat):
+        layers = [block_params(gkeys[r, i], cfg, kind) for r in range(reps)]
+        group[str(i)] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers) if layers else {}
+    params["groups"] = group
+    params["tail"] = [
+        block_params(k, cfg, kind)
+        for k, kind in zip(jax.random.split(keys[3], max(len(tail), 1)), tail)
+    ]
+    params["final_norm"] = norm_params(cfg.d_model, cfg.norm, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[4], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def _lm_head(params: dict, cfg: ArchConfig, h: jax.Array, provider=None) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.final_softcap > 0:
+        return ops.matmul(h, w, class_id="matmul_lmhead_softcap",
+                          softcap=cfg.final_softcap, provider=provider)
+    return ops.matmul(h, w, class_id="matmul_lmhead", provider=provider)
+
+
+def _embed(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    h = params["embed"][tokens]
+    if cfg.tie_embeddings:  # gemma-family embedding scaling
+        h = (h.astype(jnp.float32) * cfg.d_model ** 0.5).astype(h.dtype)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence pass (train / eval / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _stack_pass(params: dict, cfg: ArchConfig, h: jax.Array, *,
+                positions: jax.Array, caches: dict | None, remat: bool,
+                provider=None) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Run all layers. caches: {"groups": {i: stacked}, "tail": [...]} or None."""
+    pat, reps, tail = _pattern_split(cfg)
+
+    def group_body(carry, xs):
+        hh, aux = carry
+        layer_params, layer_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            c_in = layer_cache[str(i)] if layer_cache is not None else None
+            hh, c_out, a = apply_block(layer_params[str(i)], cfg, kind, hh,
+                                       positions=positions, pos=None, cache=c_in,
+                                       decode=False, provider=provider)
+            aux = aux + a
+            if c_out is not None:
+                new_cache[str(i)] = c_out
+        return (constrain(hh), aux), new_cache
+
+    body = jax.checkpoint(group_body, policy=remat_policy()) if remat else group_body
+
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = {"groups": {}, "tail": []} if caches is not None else None
+    if reps > 0:
+        if caches is None:
+            (h, aux), _ = jax.lax.scan(
+                lambda c, lp: body(c, (lp, None)), (h, aux), params["groups"]
+            )
+        else:
+            (h, aux), ys = jax.lax.scan(body, (h, aux), (params["groups"], caches["groups"]))
+            new_caches["groups"] = ys
+    for j, kind in enumerate(tail):
+        c_in = caches["tail"][j] if caches is not None else None
+        h, c_out, a = apply_block(params["tail"][j], cfg, kind, h,
+                                  positions=positions, pos=None, cache=c_in,
+                                  decode=False, provider=provider)
+        aux = aux + a
+        if caches is not None:
+            new_caches["tail"].append(c_out)
+    return h, new_caches, aux
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict, *, remat: bool = True,
+            provider=None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence logits. batch: tokens (B,S) [+ patch_embeds (B,P,D)].
+    Returns (logits over the full (vlm-prefixed) sequence, aux_loss)."""
+    tokens = batch["tokens"]
+    h = _embed(params, cfg, tokens)
+    if cfg.vision_tokens:
+        vis = ops.matmul(batch["patch_embeds"].astype(h.dtype), params["vis_proj"],
+                         provider=provider)
+        h = jnp.concatenate([vis, h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, _, aux = _stack_pass(params, cfg, h, positions=positions, caches=None,
+                            remat=remat, provider=provider)
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    return _lm_head(params, cfg, h, provider=provider), aux
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict, *, remat: bool = True,
+            provider=None) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, cfg, batch, remat=remat, provider=provider)
+    p = cfg.vision_tokens
+    tokens = batch["tokens"]
+    if p:
+        pred = logits[:, p - 1:-1, :]   # positions P-1 .. P+S-2 predict tokens 0..S-1
+        tgt = tokens
+    else:
+        pred = logits[:, :-1, :]
+        tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1).squeeze(-1)
+    mask = batch.get("mask")
+    if mask is not None:
+        m = (mask[:, 1:] if not p else mask).astype(jnp.float32)
+        ce = (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    else:
+        ce = nll.mean()
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """max_len counts *text* positions; the vision prefix is added here."""
+    max_len = max_len + cfg.vision_tokens
+    pat, reps, tail = _pattern_split(cfg)
+    groups = {}
+    for i, kind in enumerate(pat):
+        layers = [init_block_cache(cfg, kind, batch, max_len) for _ in range(reps)]
+        groups[str(i)] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers) if layers else {}
+    return {
+        "groups": groups,
+        "tail": [init_block_cache(cfg, kind, batch, max_len) for kind in tail],
+        "t": jnp.zeros((batch,), jnp.int32),   # per-slot decode positions
+    }
+
+
+def prefill(params: dict, cfg: ArchConfig, batch: dict, *, max_len: int,
+            provider=None) -> tuple[jax.Array, dict]:
+    """Process the prompt; returns (last-position logits, cache)."""
+    tokens = batch["tokens"]
+    h = _embed(params, cfg, tokens)
+    if cfg.vision_tokens:
+        vis = ops.matmul(batch["patch_embeds"].astype(h.dtype), params["vis_proj"],
+                         provider=provider)
+        h = jnp.concatenate([vis, h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    caches = init_cache(cfg, b, max_len)
+    h, new_caches, _ = _stack_pass(params, cfg, h, positions=positions,
+                                   caches=caches, remat=False, provider=provider)
+    new_caches["t"] = jnp.full((b,), s, jnp.int32)
+    h_last = apply_norm(params["final_norm"], h[:, -1:, :], cfg.norm)
+    logits = _lm_head(params, cfg, h_last, provider=provider)
+    return logits[:, 0, :], new_caches
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict, tokens: jax.Array, *,
+                provider=None) -> tuple[jax.Array, dict]:
+    """tokens: (B,) — one new token per sequence. Returns (logits (B,V), cache)."""
+    pat, reps, tail = _pattern_split(cfg)
+    pos = cache["t"]
+    h = _embed(params, cfg, tokens[:, None])
+
+    def group_body(carry, xs):
+        hh = carry
+        layer_params, layer_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            hh, c_out, _ = apply_block(layer_params[str(i)], cfg, kind, hh,
+                                       positions=None, pos=pos, cache=layer_cache[str(i)],
+                                       decode=True, provider=provider)
+            new_cache[str(i)] = c_out
+        return hh, new_cache
+
+    new_cache = {"groups": {}, "tail": [], "t": pos + 1}
+    if reps > 0:
+        h, ys = jax.lax.scan(group_body, h, (params["groups"], cache["groups"]))
+        new_cache["groups"] = ys
+    for j, kind in enumerate(tail):
+        h, c_out, _ = apply_block(params["tail"][j], cfg, kind, h,
+                                  positions=None, pos=pos, cache=cache["tail"][j],
+                                  decode=True, provider=provider)
+        new_cache["tail"].append(c_out)
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = _lm_head(params, cfg, h, provider=provider)
+    return logits[:, 0, :], new_cache

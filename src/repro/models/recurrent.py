@@ -1,0 +1,194 @@
+"""Recurrent blocks: RWKV6 (Finch) and Griffin's RG-LRU recurrent block.
+
+RWKV6 block = time-mix (token-shift interpolation, r/k/v/gate projections,
+data-dependent decay via a low-rank adapter, the wkv scan, per-head group
+norm, output gate) + channel-mix (token-shift, squared-relu FFN with
+receptance gating).  Decode keeps (wkv state, last hidden) per layer.
+
+Griffin recurrent block = two branches from the residual stream:
+gelu-gated branch, and conv1d → RG-LRU branch; multiplied and projected
+out.  Gates are per-channel (diagonal) — a recorded simplification vs the
+paper's block-dense gates (DESIGN.md).  Decode keeps (lru state, conv tail).
+
+Scans route through :mod:`repro.kernels.ops` (rwkv6 / rglru kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.common import dense_init, dtype_of, rmsnorm
+
+DECAY_LORA = 64
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+def rwkv_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix
+        "mu": jnp.full((5, d), 0.5, dt),               # shift mix for r,k,v,w,g
+        "wr": dense_init(ks[0], d, d, dt),
+        "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt),
+        "wg": dense_init(ks[3], d, d, dt),
+        "w0": jnp.full((d,), -6.0, jnp.float32),       # base decay (exp(-exp(.)))
+        "wa": dense_init(ks[4], d, DECAY_LORA, dt),    # decay adapter
+        "wb": dense_init(ks[5], DECAY_LORA, d, dt),
+        "u": (jax.random.normal(ks[6], (h, hd), jnp.float32) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dt),                    # per-head group norm scale
+        "wo": dense_init(ks[7], d, d, dt),
+        # channel-mix
+        "mu_c": jnp.full((2, d), 0.5, dt),
+        "ck": dense_init(ks[8], d, f, dt),
+        "cv": dense_init(ks[9], f, d, dt),
+        "cr": dense_init(jax.random.fold_in(key, 11), d, d, dt),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """shifted[t] = x[t-1]; position 0 takes `last` (decode carry)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int) -> dict:
+    h, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    dt = dtype_of(cfg.dtype)
+    return {
+        "state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "last_tm": jnp.zeros((batch, d), dt),
+        "last_cm": jnp.zeros((batch, d), dt),
+    }
+
+
+def rwkv_block(p: dict, cfg: ArchConfig, x: jax.Array, *, cache: dict | None,
+               provider=None) -> tuple[jax.Array, dict | None]:
+    """Full RWKV6 block (time-mix + channel-mix) on normalized inputs is NOT
+    assumed: this block applies its own norms like the reference model.
+    x: (B, S, D) residual stream."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    # ---- time mix ----
+    xn = rmsnorm(x, jnp.zeros((d,), x.dtype))
+    last_tm = cache["last_tm"] if cache is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(xn, last_tm)
+    mu = p["mu"].astype(jnp.float32)
+    mix = lambda i: (xn.astype(jnp.float32) * mu[i] + xs.astype(jnp.float32) * (1 - mu[i])).astype(x.dtype)
+    r = ops.matmul(mix(0), p["wr"], provider=provider).reshape(b, s, h, hd)
+    k = ops.matmul(mix(1), p["wk"], provider=provider).reshape(b, s, h, hd)
+    v = ops.matmul(mix(2), p["wv"], provider=provider).reshape(b, s, h, hd)
+    g = ops.matmul(mix(4), p["wg"], provider=provider)
+    dw = jnp.tanh(ops.matmul(mix(3), p["wa"], provider=provider).astype(jnp.float32))
+    dw = dw @ p["wb"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"] + dw)).reshape(b, s, h, hd)   # decay in (0,1)
+
+    tr = lambda a: jnp.swapaxes(a, 1, 2)  # (B, H, S, hd)
+    state0 = cache["state"] if cache is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+    y, state = ops.rwkv6(tr(r), tr(k), tr(v), tr(w.astype(x.dtype)), p["u"],
+                         state0, provider=provider)
+    y = jnp.swapaxes(y, 1, 2).reshape(b, s, d)
+    # per-head group norm + silu output gate
+    yh = y.reshape(b, s, h, hd).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-6)
+    y = (yh.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    x = x + ops.matmul(y, p["wo"], provider=provider)
+
+    # ---- channel mix ----
+    xn2 = rmsnorm(x, jnp.zeros((d,), x.dtype))
+    last_cm = cache["last_cm"] if cache is not None else jnp.zeros((b, d), x.dtype)
+    xs2 = _token_shift(xn2, last_cm)
+    mc = p["mu_c"].astype(jnp.float32)
+    mixc = lambda i: (xn2.astype(jnp.float32) * mc[i] + xs2.astype(jnp.float32) * (1 - mc[i])).astype(x.dtype)
+    kk = ops.matmul(mixc(0), p["ck"], provider=provider)
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = ops.matmul(kk, p["cv"], provider=provider)
+    rr = jax.nn.sigmoid(ops.matmul(mixc(1), p["cr"], provider=provider).astype(jnp.float32))
+    x = x + (rr * vv.astype(jnp.float32)).astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state, "last_tm": xn[:, -1, :], "last_cm": xn2[:, -1, :]}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Griffin / RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+
+def griffin_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gate": dense_init(ks[0], d, w, dt),     # gelu branch
+        "w_x": dense_init(ks[1], d, w, dt),        # recurrent branch input
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32) * 0.1).astype(dt),
+        "lambda": jnp.full((w,), 2.0, jnp.float32),   # a = sigmoid(λ)^(c·r_t)
+        "gate_a": jnp.zeros((w,), jnp.float32),       # diagonal recurrence gate
+        "gate_i": jnp.zeros((w,), jnp.float32),       # diagonal input gate
+        "w_out": dense_init(ks[3], w, d, dt),
+    }
+
+
+def init_griffin_cache(cfg: ArchConfig, batch: int) -> dict:
+    w = cfg.rnn_width or cfg.d_model
+    dt = dtype_of(cfg.dtype)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dt),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_decay(xc: jax.Array, p: dict) -> jax.Array:
+    """Per-step decay a_t ∈ (0,1): a = exp(c · log σ(λ) · σ(x·g_a))."""
+    r = jax.nn.sigmoid(xc.astype(jnp.float32) * p["gate_a"])
+    log_a = _RGLRU_C * jax.nn.log_sigmoid(p["lambda"]) * r
+    return jnp.exp(log_a)
+
+
+def griffin_block(p: dict, cfg: ArchConfig, x: jax.Array, *, cache: dict | None,
+                  provider=None) -> tuple[jax.Array, dict | None]:
+    """Griffin recurrent block on the *normalized* input x: (B, S, D).
+    Returns the block output (caller adds the residual)."""
+    b, s, d = x.shape
+    gate = jax.nn.gelu(ops.matmul(x, p["w_gate"], provider=provider).astype(jnp.float32))
+    xr = ops.matmul(x, p["w_x"], provider=provider)        # (B, S, W)
+
+    # temporal conv1d (causal, width cw)
+    cw = cfg.conv_width
+    tail = cache["conv"] if cache is not None else jnp.zeros((b, cw - 1, xr.shape[-1]), xr.dtype)
+    xpad = jnp.concatenate([tail, xr], axis=1)             # (B, S+cw-1, W)
+    conv = sum(
+        xpad[:, i:i + s, :].astype(jnp.float32) * p["conv"][i].astype(jnp.float32)
+        for i in range(cw)
+    ).astype(xr.dtype)
+
+    i_gate = jax.nn.sigmoid(conv.astype(jnp.float32) * p["gate_i"])
+    a = _rglru_decay(conv, p)
+    h0 = cache["h"] if cache is not None else jnp.zeros((b, xr.shape[-1]), jnp.float32)
+    y, h_final = ops.rglru((i_gate * conv.astype(jnp.float32)).astype(xr.dtype),
+                           a.astype(xr.dtype), h0, provider=provider)
+
+    out = (y.astype(jnp.float32) * gate).astype(x.dtype)
+    out = ops.matmul(out, p["w_out"], provider=provider)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_final, "conv": xpad[:, xpad.shape[1] - (cw - 1):, :]}
+    return out, new_cache

@@ -1,0 +1,23 @@
+from repro.optim.adamw import AdamWConfig, apply_updates, global_norm, init_state, lr_at
+from repro.optim.compression import (
+    compress_with_feedback,
+    compressed_gradients,
+    compressed_psum,
+    dequantize,
+    init_residuals,
+    quantize,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "apply_updates",
+    "compress_with_feedback",
+    "compressed_gradients",
+    "compressed_psum",
+    "dequantize",
+    "global_norm",
+    "init_residuals",
+    "init_state",
+    "lr_at",
+    "quantize",
+]

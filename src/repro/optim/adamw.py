@@ -1,0 +1,88 @@
+"""AdamW with f32 master weights, global-norm clipping, and LR schedules.
+
+Production conventions: params may be stored bf16; the optimizer keeps f32
+first/second moments and an f32 master copy, casting back to the param dtype
+after each update (mixed-precision training).  All state is a pytree with
+the same structure as params, so the distributed sharding rules apply to it
+leaf-for-leaf (ZeRO-style: optimizer state inherits the param sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio·peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_state(params: Any) -> dict:
+    f32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        # copy=True: an f32 param would otherwise alias its master buffer,
+        # and donating params+opt_state together would donate it twice.
+        "master": jax.tree_util.tree_map(
+            lambda x: jnp.array(x, dtype=jnp.float32, copy=True), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: AdamWConfig
+                  ) -> tuple[Any, dict, dict]:
+    """One AdamW step. Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        master_new = master - lr * (update + cfg.weight_decay * master)
+        return m_new, v_new, master_new, master_new.astype(p.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, w, p) for g, m, v, w, p in zip(flat_g, flat_m, flat_v, flat_w, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_w = treedef.unflatten([o[2] for o in out])
+    new_p = treedef.unflatten([o[3] for o in out])
+    new_state = {"m": new_m, "v": new_v, "master": new_w, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,109 @@
+"""Batched serving engine: slot-based continuous batching.
+
+The engine owns a fixed number of decode *slots* (the serving batch) and a
+single batched cache whose ``t`` vector tracks a per-slot decode position —
+sequences at different lengths decode together in one ``decode_step`` call.
+New requests are prefilled (batch=1) into a free slot by splicing that
+slot's rows of every cache leaf; finished sequences (EOS / max-tokens) free
+their slot immediately, keeping the decode batch dense.
+
+This is the TPU-idiomatic shape of continuous batching for fixed-size
+caches; ring buffers (windowed layers) and recurrent states come from the
+model substrate unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.build import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    eos_id: int | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, *, slots: int, max_len: int,
+                 extras: dict | None = None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.extras = {k: jnp.asarray(v) for k, v in (extras or {}).items()}
+        self.cache = model.init_cache(slots, max_len)
+        self.active: dict[int, Request] = {}
+        self.last_logits = None   # (slots, vocab) from the latest decode step
+        self._uid = 0
+        self._decode = jax.jit(model.decode_step)
+
+    # -- request admission ---------------------------------------------------
+    def add_request(self, prompt: list[int], max_new_tokens: int = 16,
+                    eos_id: int | None = None) -> Request | None:
+        """Admit a request into a free slot (None if the batch is full)."""
+        free = [s for s in range(self.slots) if s not in self.active]
+        if not free:
+            return None
+        slot = free[0]
+        self._uid += 1
+        req = Request(self._uid, list(prompt), max_new_tokens, eos_id)
+        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+        for k, v in self.extras.items():
+            batch[k] = v[None] if v.ndim == 2 else v  # (1, ..., D) stub inputs
+        logits, cache1 = self.model.prefill(self.params, batch, max_len=self.max_len)
+        req.generated.append(int(jnp.argmax(logits[0])))
+        self.cache = jax.tree_util.tree_map(
+            lambda full, one: _splice_slot(full, one, slot), self.cache, cache1
+        )
+        self.active[slot] = req
+        return req
+
+    # -- decode ----------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One batched decode step for all active slots; returns finished."""
+        if not self.active:
+            return []
+        toks = np.zeros(self.slots, np.int32)
+        for slot, req in self.active.items():
+            toks[slot] = req.generated[-1]
+        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(toks))
+        self.last_logits = logits
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.generated) > req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+    def run_to_completion(self, max_steps: int = 512) -> None:
+        for _ in range(max_steps):
+            if not self.active:
+                break
+            self.step()
+
+
+def _splice_slot(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Write the batch=1 cache leaf `one` into row `slot` of the batched
+    leaf `full` (the batch axis is wherever their shapes differ)."""
+    for ax in range(one.ndim):
+        if full.shape[ax] != one.shape[ax]:
+            idx = [slice(None)] * one.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(one.astype(full.dtype))
+    # identical shapes: single-slot engine — the whole leaf is this slot's
+    return one.astype(full.dtype)

@@ -1,0 +1,13 @@
+"""Shared test configuration.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device; only
+the dry-run entrypoint (and the subprocess distribution tests) force host
+platform device counts.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""Cost-model behaviour: determinism, schedule sensitivity, validity."""
+import pytest
+
+from repro.core.cost_model import evaluate, kernel_seconds, measure, model_seconds
+from repro.core.schedule import Schedule, ScheduleInvalid, concretize, default_schedule
+from repro.core.workload import KernelInstance, KernelUse
+from repro.hw.specs import TPU_V5E
+
+
+def g(m=1024, n=1024, k=1024):
+    return KernelInstance.make("matmul", M=m, N=n, K=k)
+
+
+def test_measure_deterministic_given_seed():
+    sched = Schedule.make("matmul", {"M": 128, "N": 256, "K": 128})
+    a = measure(g(), sched, seed=7)
+    b = measure(g(), sched, seed=7)
+    assert a.seconds == b.seconds
+    c = measure(g(), sched, seed=8)
+    assert c.seconds != a.seconds  # noise varies with seed
+
+
+def test_noise_zero_matches_evaluate():
+    sched = Schedule.make("matmul", {"M": 128, "N": 256, "K": 128})
+    m = measure(g(), sched, noise_sigma=0.0)
+    assert m.seconds == pytest.approx(evaluate(concretize(sched, g())).seconds)
+
+
+def test_bigger_tiles_reduce_hbm_traffic():
+    """Reuse grows with tile size: the memory term must reflect it."""
+    small = evaluate(concretize(Schedule.make("matmul", {"M": 8, "N": 128, "K": 128}), g()))
+    big = evaluate(concretize(Schedule.make("matmul", {"M": 256, "N": 256, "K": 128}), g()))
+    assert big.hbm_bytes < small.hbm_bytes
+
+
+def test_order_changes_traffic():
+    """Reorder (paper primitive) must change the modeled HBM bytes."""
+    t = {"M": 64, "N": 128, "K": 128}
+    a = evaluate(concretize(Schedule.make("matmul", t, order=("M", "N", "K")), g()))
+    b = evaluate(concretize(Schedule.make("matmul", t, order=("M", "K", "N")), g()))
+    assert a.hbm_bytes != b.hbm_bytes
+
+
+def test_vmem_overflow_invalid():
+    sched = Schedule.make("matmul", {"M": 4096, "N": 4096, "K": 4096})
+    inst = g(4096, 4096, 4096)
+    with pytest.raises(ScheduleInvalid):
+        evaluate(concretize(sched, inst))
+    assert not measure(inst, sched).valid
+
+
+def test_parallel_reduction_invalid():
+    sched = Schedule.make("matmul", {"M": 128, "N": 128, "K": 128},
+                          order=("K", "M", "N"), parallel=1)
+    with pytest.raises(ScheduleInvalid):
+        evaluate(concretize(sched, g()))
+
+
+def test_alignment_penalty():
+    """Misaligned (non-128) N tiles waste MXU lanes -> slower compute term."""
+    aligned = evaluate(concretize(Schedule.make("matmul", {"M": 128, "N": 128, "K": 128}), g()))
+    odd = KernelInstance.make("matmul", M=1024, N=1000, K=1024)
+    mis = evaluate(concretize(Schedule.make("matmul", {"M": 128, "N": 8, "K": 128}),
+                              odd, mode="adaptive"))
+    assert mis.compute_s > aligned.compute_s
+
+
+def test_roofline_floor():
+    """No schedule may beat the ideal roofline for its kernel."""
+    inst = g()
+    ideal = max(2 * 1024**3 / TPU_V5E.peak_flops_bf16,
+                3 * 1024 * 1024 * 2 / TPU_V5E.hbm_bandwidth)
+    for tiles in ({"M": 128, "N": 128, "K": 128}, {"M": 512, "N": 512, "K": 128},
+                  {"M": 1024, "N": 256, "K": 512}):
+        bd = evaluate(concretize(Schedule.make("matmul", tiles), inst))
+        assert bd.seconds >= ideal * 0.99
+
+
+def test_model_seconds_uses_counts():
+    u = [KernelUse(g(), use_count=3)]
+    assert model_seconds(u) == pytest.approx(3 * kernel_seconds(g()))
+
+
+def test_attention_window_cheaper():
+    full = KernelInstance.make("flash_attention_causal", Q=4096, KV=4096, H=8, D=128, B=1)
+    swa = KernelInstance.make("flash_attention_swa", Q=4096, KV=4096, H=8, D=128, B=1,
+                              window=512)
+    s_full = kernel_seconds(full)
+    s_swa = kernel_seconds(swa)
+    assert s_swa < s_full
+
+
+def test_scan_families():
+    rw = KernelInstance.make("rwkv6_scan", T=4096, C=2048, D=64, B=4)
+    rg = KernelInstance.make("rglru_scan", T=4096, C=2560, B=4)
+    assert kernel_seconds(rw) > 0 and kernel_seconds(rg) > 0

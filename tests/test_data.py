@@ -1,0 +1,59 @@
+"""Data pipeline: determinism, sharding, restart semantics."""
+import numpy as np
+
+from repro.data import DataConfig, Pipeline, SyntheticSource, make_source
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=1000, seq_len=16, global_batch=8, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_batch_deterministic():
+    a = SyntheticSource(_cfg()).batch_at(12)
+    b = SyntheticSource(_cfg()).batch_at(12)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticSource(_cfg()).batch_at(13)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_tokens_in_range():
+    batch = SyntheticSource(_cfg()).batch_at(0)
+    assert batch["tokens"].min() >= 1
+    assert batch["tokens"].max() < 1000
+    assert batch["tokens"].shape == (8, 16)
+
+
+def test_shards_differ_and_partition_batch():
+    s0 = SyntheticSource(_cfg(num_shards=2, shard_index=0)).batch_at(5)
+    s1 = SyntheticSource(_cfg(num_shards=2, shard_index=1)).batch_at(5)
+    assert s0["tokens"].shape == (4, 16)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_pipeline_prefetch_and_restart():
+    p = Pipeline(_cfg(), start_step=3)
+    step, batch = next(p)
+    assert step == 3
+    step2, batch2 = next(p)
+    assert step2 == 4
+    p.close()
+    # restart at the same step reproduces the stream exactly
+    p2 = Pipeline(_cfg(), start_step=3)
+    s, b = next(p2)
+    p2.close()
+    assert s == 3
+    np.testing.assert_array_equal(b["tokens"], batch["tokens"])
+
+
+def test_memmap_source(tmp_path):
+    tokens = np.arange(1000, dtype=np.int32)
+    path = str(tmp_path / "corpus.bin")
+    tokens.tofile(path)
+    src = make_source(_cfg(source="memmap", corpus_path=path))
+    a = src.batch_at(2)
+    b = src.batch_at(2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (8, 16)
+    assert a["tokens"].max() < 1000

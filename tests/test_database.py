@@ -1,0 +1,56 @@
+"""Schedule database semantics + persistence."""
+import os
+
+from repro.core.database import Record, ScheduleDB
+from repro.core.schedule import Schedule, default_schedule
+from repro.core.workload import KernelInstance
+
+
+def g(m, n, k):
+    return KernelInstance.make("matmul", M=m, N=n, K=k)
+
+
+def rec(inst, secs, model="m"):
+    return Record(inst, default_schedule(inst), secs, model)
+
+
+def test_keeps_best_per_workload_and_model():
+    db = ScheduleDB()
+    db.add(rec(g(512, 512, 512), 2.0))
+    db.add(rec(g(512, 512, 512), 1.0))
+    db.add(rec(g(512, 512, 512), 3.0))
+    assert len(db) == 1
+    assert db.exact(g(512, 512, 512)).seconds == 1.0
+
+
+def test_exact_across_models_returns_best():
+    db = ScheduleDB()
+    db.add(rec(g(512, 512, 512), 2.0, "a"))
+    db.add(rec(g(512, 512, 512), 1.5, "b"))
+    assert db.exact(g(512, 512, 512)).model_id == "b"
+
+
+def test_by_class_filters_models():
+    db = ScheduleDB()
+    db.add(rec(g(512, 512, 512), 1.0, "a"))
+    db.add(rec(g(256, 256, 256), 1.0, "b"))
+    assert len(db.by_class("matmul")) == 2
+    assert [r.model_id for r in db.by_class("matmul", ["a"])] == ["a"]
+    assert db.class_counts("a") == {"matmul": 1}
+
+
+def test_persistence_roundtrip(tmp_path):
+    db = ScheduleDB()
+    s = Schedule.make("matmul", {"M": 64, "N": 128, "K": 128}, order=("N", "M", "K"))
+    db.add(Record(g(512, 512, 512), s, 1.25, "donor", trials=42))
+    path = os.path.join(tmp_path, "db.json")
+    db.save(path)
+    db2 = ScheduleDB.load(path)
+    assert len(db2) == 1
+    r = db2.records()[0]
+    assert r.schedule == s and r.seconds == 1.25 and r.trials == 42
+    assert db2.exact(g(512, 512, 512)) is not None
+
+
+def test_load_or_empty(tmp_path):
+    assert len(ScheduleDB.load_or_empty(os.path.join(tmp_path, "nope.json"))) == 0

@@ -1,0 +1,84 @@
+"""Flash-attention kernel + chunked oracle vs naive attention."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.schedule import Schedule, concretize
+from repro.core.workload import KernelInstance
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref
+
+
+def _data(b, hq, hkv, sq, skv, d, seed=0, dtype=jnp.float32):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(r.normal(size=(b, hkv, skv, d)), dtype)
+    v = jnp.asarray(r.normal(size=(b, hkv, skv, d)), dtype)
+    return q, k, v
+
+
+def _cs(sq, skv, bq, bkv, cls="flash_attention_causal", **p):
+    inst = KernelInstance.make(cls, Q=sq, KV=skv, dtype="float32", **p)
+    return concretize(Schedule.make(cls, {"Q": bq, "KV": bkv}), inst, mode="adaptive")
+
+
+@given(sq=st.sampled_from([8, 16, 32]), bq=st.sampled_from([4, 8, 16]),
+       bkv=st.sampled_from([4, 8, 16]), causal=st.booleans(),
+       window=st.sampled_from([0, 8]), softcap=st.sampled_from([0.0, 20.0]),
+       group=st.sampled_from([1, 2]))
+@settings(max_examples=24, deadline=None)
+def test_kernel_matches_naive(sq, bq, bkv, causal, window, softcap, group):
+    b, hkv, d = 2, 2, 16
+    hq = hkv * group
+    q, k, v = _data(b, hq, hkv, sq, sq, d)
+    cs = _cs(sq, sq, bq, bkv)
+    y = fa.flash_attention(q, k, v, cs, causal=causal, window=window, softcap=softcap)
+    yr = ref.attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+
+
+@given(chunk=st.sampled_from([4, 8, 16, 32]), causal=st.booleans(),
+       window=st.sampled_from([0, 8]))
+@settings(max_examples=16, deadline=None)
+def test_chunked_oracle_matches_naive(chunk, causal, window):
+    """The XLA fallback path must be numerically identical to softmax attn."""
+    q, k, v = _data(2, 4, 2, 24, 24, 16, seed=3)
+    yr = ref.attention(q, k, v, causal=causal, window=window)
+    yc = ref.chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    np.testing.assert_allclose(yc, yr, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_q1_with_offset():
+    q, k, v = _data(2, 4, 2, 1, 32, 16, seed=4)
+    cs = _cs(1, 32, 1, 8)
+    for off in (0, 7, 31):
+        y = fa.flash_attention(q, k, v, cs, causal=True, q_offset=off)
+        yr = ref.attention(q, k, v, causal=True, q_offset=off)
+        np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+
+
+def test_cross_attention_lengths_differ():
+    q, k, v = _data(1, 4, 4, 8, 40, 16, seed=5)
+    cs = _cs(8, 40, 4, 8, cls="flash_attention_cross")
+    y = fa.flash_attention(q, k, v, cs, causal=False)
+    yr = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+
+
+def test_fully_masked_rows_are_finite():
+    """Window smaller than block: rows with no visible kv must not NaN."""
+    q, k, v = _data(1, 2, 2, 16, 16, 8, seed=6)
+    cs = _cs(16, 16, 8, 8)
+    y = fa.flash_attention(q, k, v, cs, causal=True, window=2)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_bf16_kernel():
+    q, k, v = _data(1, 2, 2, 16, 16, 16, seed=7, dtype=jnp.bfloat16)
+    cs = _cs(16, 16, 8, 8)
+    y = fa.flash_attention(q, k, v, cs, causal=True)
+    yr = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               rtol=3e-2, atol=3e-2)

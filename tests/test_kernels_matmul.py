@@ -1,0 +1,98 @@
+"""Pallas matmul kernel vs pure-jnp oracle: shape/dtype/schedule sweeps."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.schedule import Schedule, concretize
+from repro.core.workload import KernelInstance
+from repro.kernels import matmul as mk
+from repro.kernels import ref
+
+DIMS = st.sampled_from([16, 32, 48, 64, 96])
+TILES = st.sampled_from([8, 16, 32])
+ORDERS = st.sampled_from([("M", "N", "K"), ("N", "M", "K"), ("M", "K", "N"),
+                          ("K", "M", "N"), ("N", "K", "M")])
+
+
+def _data(m, n, k, dtype):
+    r = np.random.default_rng(m * 131 + n * 17 + k)
+    x = jnp.asarray(r.normal(size=(m, k)), dtype)
+    w = jnp.asarray(r.normal(size=(k, n)), dtype)
+    return x, w
+
+
+@given(m=DIMS, n=DIMS, k=DIMS, tm=TILES, tn=TILES, tk=TILES, order=ORDERS,
+       cw=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_matmul_matches_oracle(m, n, k, tm, tn, tk, order, cw):
+    x, w = _data(m, n, k, jnp.float32)
+    inst = KernelInstance.make("matmul", M=m, N=n, K=k, dtype="float32")
+    sched = Schedule.make("matmul", {"M": tm, "N": tn, "K": tk}, order=order,
+                          cache_write=cw)
+    cs = concretize(sched, inst, mode="adaptive")
+    y = mk.matmul(x, w, cs, interpret=True)
+    np.testing.assert_allclose(y, ref.matmul(x, w, "matmul"), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("class_id,needs", [
+    ("matmul_bias", "bias"),
+    ("matmul_bias_gelu", "bias"),
+    ("matmul_silu_glu", None),
+    ("matmul_gelu_glu", None),
+    ("matmul_residual", "residual"),
+    ("matmul_lmhead", None),
+    ("matmul_lmhead_softcap", None),
+])
+def test_epilogues_match_oracle(class_id, needs):
+    m, n, k = 32, 64, 48
+    x, w = _data(m, n, k, jnp.float32)
+    r = np.random.default_rng(5)
+    bias = jnp.asarray(r.normal(size=(n,)), jnp.float32) if needs == "bias" else None
+    out_n = n // 2 if "glu" in class_id else n
+    residual = jnp.asarray(r.normal(size=(m, out_n)), jnp.float32) if needs == "residual" else None
+    softcap = 30.0 if "softcap" in class_id else 0.0
+    inst = KernelInstance.make(class_id, M=m, N=n, K=k, dtype="float32")
+    cs = concretize(Schedule.make(class_id, {"M": 16, "N": 16, "K": 16}), inst)
+    y = mk.matmul(x, w, cs, class_id=class_id, bias=bias, residual=residual,
+                  softcap=softcap, interpret=True)
+    yr = ref.matmul(x, w, class_id, bias=bias, residual=residual, softcap=softcap)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+
+
+def test_bfloat16_tolerance():
+    m, n, k = 64, 64, 64
+    x, w = _data(m, n, k, jnp.bfloat16)
+    inst = KernelInstance.make("matmul", M=m, N=n, K=k, dtype="bfloat16")
+    cs = concretize(Schedule.make("matmul", {"M": 16, "N": 32, "K": 16}), inst)
+    y = mk.matmul(x, w, cs, interpret=True)
+    yr = ref.matmul(x, w, "matmul")
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_grouped_matmul_matches_vmapped_oracle():
+    e, m, n, k = 4, 32, 48, 32
+    r = np.random.default_rng(9)
+    x = jnp.asarray(r.normal(size=(e, m, k)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(e, k, n)), jnp.float32)
+    inst = KernelInstance.make("moe_gemm", M=m, N=n, K=k, E=e, dtype="float32")
+    cs = concretize(Schedule.make("moe_gemm", {"M": 16, "N": 16, "K": 16, "E": 1},
+                                  order=("E", "M", "N", "K")), inst)
+    y = mk.grouped_matmul(x, w, cs, interpret=True)
+    yr = jax.vmap(lambda a, b: ref.matmul(a, b, "moe_gemm"))(x, w)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+
+
+def test_glu_forces_scratch_on_bad_order():
+    """GLU epilogues silently canonicalize to K-inner scratch accumulation."""
+    m, n, k = 32, 32, 32
+    x, w = _data(m, n, k, jnp.float32)
+    inst = KernelInstance.make("matmul_silu_glu", M=m, N=n, K=k, dtype="float32")
+    cs = concretize(Schedule.make("matmul_silu_glu", {"M": 16, "N": 16, "K": 16},
+                                  order=("K", "M", "N"), cache_write=False), inst)
+    y = mk.matmul(x, w, cs, class_id="matmul_silu_glu", interpret=True)
+    np.testing.assert_allclose(y, ref.matmul(x, w, "matmul_silu_glu"),
+                               rtol=2e-4, atol=2e-4)

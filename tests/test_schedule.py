@@ -1,0 +1,113 @@
+"""Property tests for the schedule IR (paper §4.1-4.2 semantics)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.schedule import (
+    Schedule,
+    ScheduleInvalid,
+    concretize,
+    default_schedule,
+    is_valid,
+    nearest_divisor,
+)
+from repro.core.workload import KERNEL_CLASSES, KernelInstance
+
+MATMUL_EXTENTS = st.sampled_from([8, 16, 64, 96, 128, 512, 768, 1024, 4096])
+TILES = st.sampled_from([1, 4, 8, 16, 32, 128, 256, 512])
+
+
+def mk_inst(m, n, k):
+    return KernelInstance.make("matmul", M=m, N=n, K=k)
+
+
+@given(m=MATMUL_EXTENTS, n=MATMUL_EXTENTS, k=MATMUL_EXTENTS,
+       tm=TILES, tn=TILES, tk=TILES)
+@settings(max_examples=80, deadline=None)
+def test_strict_concretize_divides_or_raises(m, n, k, tm, tn, tk):
+    inst = mk_inst(m, n, k)
+    sched = Schedule.make("matmul", {"M": tm, "N": tn, "K": tk})
+    try:
+        cs = concretize(sched, inst, mode="strict")
+    except ScheduleInvalid:
+        # strict invalid iff the reduction tile oversizes or fails to divide
+        # (M/N are maskable row/column axes on TPU)
+        assert tk > k or k % tk
+        return
+    # reduction axis divides exactly; maskable axes are clamped to the extent
+    assert k % cs.t["K"] == 0
+    for axis, extent in (("M", m), ("N", n)):
+        assert 1 <= cs.t[axis] <= extent
+    assert not cs.adapted
+
+
+@given(m=MATMUL_EXTENTS, n=MATMUL_EXTENTS, k=MATMUL_EXTENTS,
+       tm=TILES, tn=TILES, tk=TILES)
+@settings(max_examples=80, deadline=None)
+def test_adaptive_concretize_always_valid(m, n, k, tm, tn, tk):
+    """Beyond-paper reformulation: adaptive mode never produces invalid code.
+    Maskable axes (M, N) may keep non-dividing tiles (partial blocks are
+    masked); the reduction axis must divide exactly."""
+    inst = mk_inst(m, n, k)
+    sched = Schedule.make("matmul", {"M": tm, "N": tn, "K": tk})
+    cs = concretize(sched, inst, mode="adaptive")
+    assert k % cs.t["K"] == 0 and 1 <= cs.t["K"] <= k
+    for axis, extent in (("M", m), ("N", n)):
+        assert 1 <= cs.t[axis] <= extent
+
+
+@given(n=st.integers(1, 4096), target=st.integers(1, 4096))
+@settings(max_examples=100, deadline=None)
+def test_nearest_divisor_properties(n, target):
+    d = nearest_divisor(n, target)
+    assert n % d == 0 and d >= 1
+
+
+def test_self_transfer_is_identity():
+    """Applying a schedule to the instance it was tuned for never adapts."""
+    inst = mk_inst(512, 512, 512)
+    sched = Schedule.make("matmul", {"M": 128, "N": 256, "K": 64})
+    cs = concretize(sched, inst)
+    assert cs.t == {"M": 128, "N": 256, "K": 64}
+    assert not cs.adapted
+
+
+def test_cross_class_transfer_always_invalid():
+    """Paper §4.2: schedules never transfer across kernel classes."""
+    sched = Schedule.make("matmul", {"M": 8, "N": 128, "K": 128})
+    inst = KernelInstance.make("matmul_bias", M=512, N=512, K=512)
+    with pytest.raises(ScheduleInvalid):
+        concretize(sched, inst)
+
+
+@pytest.mark.parametrize("class_id", sorted(KERNEL_CLASSES))
+def test_default_schedule_valid_for_every_class(class_id):
+    axes = KERNEL_CLASSES[class_id][0]
+    inst = KernelInstance.make(class_id, **{a: 384 for a in axes})
+    assert is_valid(default_schedule(inst), inst)
+
+
+def test_json_roundtrip():
+    sched = Schedule.make("matmul", {"M": 8, "N": 128, "K": 128},
+                          order=("N", "M", "K"), parallel=2, unroll=64,
+                          vec=256, cache_write=False, source="abc")
+    assert Schedule.from_json(sched.to_json()) == sched
+
+
+def test_oversized_tile_invalid_strict():
+    """Paper: 'a loop splitting factor larger than the loop itself' -> invalid
+    (on the reduction axis; row/column axes are masked on TPU)."""
+    inst = mk_inst(64, 64, 64)
+    sched = Schedule.make("matmul", {"M": 64, "N": 64, "K": 128})
+    assert not is_valid(sched, inst, mode="strict")
+    assert is_valid(sched, inst, mode="adaptive")
+    # maskable axis oversize is fine
+    sched_m = Schedule.make("matmul", {"M": 128, "N": 64, "K": 64})
+    assert is_valid(sched_m, inst, mode="strict")
+
+
+def test_glu_odd_n_tile_invalid():
+    inst = KernelInstance.make("matmul_silu_glu", M=64, N=64, K=64)
+    sched = Schedule.make("matmul_silu_glu", {"M": 8, "N": 5, "K": 8})
+    assert not is_valid(sched, inst, mode="strict")
+    assert is_valid(sched, inst, mode="adaptive")
