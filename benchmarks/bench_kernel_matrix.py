@@ -8,8 +8,8 @@ pair (both d_model=6144 MoE), the ResNet18-from-ResNet50 analogue.
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core.cost_model import kernel_seconds
 from repro.core.heuristic import select_donor
+from repro.core.runner import default_runner
 from repro.core.transfer import transfer_matrix
 from repro.core.tuner import arch_uses
 
@@ -19,14 +19,16 @@ TARGET = "mixtral-8x22b"
 def run() -> list[tuple]:
     db = common.full_db()
     uses = arch_uses(TARGET, common.SHAPE, dp=common.DP, tp=common.TP)
-    donor = select_donor(uses, db, exclude=(TARGET,))
-    mat = transfer_matrix(uses, db, donors=[donor])
+    # One memoizing runner serves donor selection and every matrix cell.
+    runner = default_runner()
+    donor = select_donor(uses, db, exclude=(TARGET,), runner=runner)
+    mat = transfer_matrix(uses, db, donors=[donor], runner=runner)
     rows = []
     payload = {"target": TARGET, "donor": donor, "cells": {}}
     total = valid = 0
     for u in uses:
         row = mat[u.instance.workload_key()]
-        untuned = kernel_seconds(u.instance)
+        untuned = runner.seconds(u.instance)
         best = min((s for s in row.values() if s is not None), default=None)
         n_inv = sum(1 for s in row.values() if s is None)
         total += len(row)
@@ -42,9 +44,12 @@ def run() -> list[tuple]:
             "schedules": {k: v for k, v in row.items()},
         }
     payload["valid_fraction"] = valid / max(total, 1)
+    tele = payload["runner"] = runner.telemetry()
     common.save_result("fig4_kernel_matrix", payload)
     rows.append(("fig4/valid_fraction", round(100 * valid / max(total, 1), 1),
                  f"{valid}/{total} transfers produced valid code"))
+    rows.append(("fig4/unique_evaluations", int(tele["measurements"]),
+                 f"requests={int(tele['requests'])} cache_hits={int(tele['cache_hits'])}"))
     return rows
 
 

@@ -1,0 +1,105 @@
+"""MeasureRunner subsystem: wall-time and measurement-count comparison.
+
+Runs the same mixed-donor-pool transfer workload (paper §5.5 setting: every
+donor's schedules compete for every target kernel, plus the Fig. 4 matrix
+pass over the identical cells) under three measurement backends:
+
+* ``bare``    — AnalyticalRunner per call (the pre-runner behaviour);
+* ``cached``  — one CachedRunner shared across the matrix + tune passes;
+* ``pruning`` — PruningRunner(CachedRunner(...)) draft-then-verify.
+
+Reports unique cost-model evaluations, cache hits, virtual search seconds,
+and wall time; the cached backend must cut unique evaluations by >= 2x
+(the acceptance bar for the runner refactor).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core.autoscheduler import tune_kernel
+from repro.core.database import Record, ScheduleDB
+from repro.core.runner import AnalyticalRunner, CachedRunner, PruningRunner
+from repro.core.transfer import transfer_matrix, transfer_tune
+from repro.core.workload import KernelInstance, KernelUse
+
+#: Donor pool: GEMMs tuned standalone under distinct donor model ids — the
+#: mixed-pool setting where every donor's schedules hit every target kernel.
+DONOR_SIZES = {"gemm512": 512, "gemm768": 768, "gemm1024": 1024, "gemm1536": 1536}
+TARGET_SIZES = (2048, 1280, 640, 256)
+TRIALS = 96
+VERIFY_TOP_K = 2
+
+
+def _g(size: int) -> KernelInstance:
+    return KernelInstance.make("matmul", M=size, N=size, K=size)
+
+
+def _donor_db() -> ScheduleDB:
+    db = ScheduleDB()
+    for model, size in DONOR_SIZES.items():
+        res = tune_kernel(_g(size), trials=TRIALS, seed=common.SEED)
+        db.add(Record(_g(size), res.best, res.best_seconds, model))
+    return db
+
+
+def _workload(db: ScheduleDB, runner) -> dict:
+    """Fig.4 matrix + mixed-pool transfer over the same cells (one runner)."""
+    uses = [KernelUse(_g(s)) for s in TARGET_SIZES]
+    before = runner.telemetry()
+    t0 = time.monotonic()
+    transfer_matrix(uses, db, donors=None, seed=common.SEED, runner=runner)
+    tt = transfer_tune(uses, db, donors=None, seed=common.SEED, runner=runner)
+    wall = time.monotonic() - t0
+    after = runner.telemetry()
+    return {
+        "wall_s": wall,
+        "speedup": tt.speedup,
+        "tuned_seconds": tt.tuned_seconds,
+        "search_time_s": tt.search_time_s,
+        "evaluations": int(after["measurements"] - before["measurements"]),
+        "requests": int(after["requests"] - before["requests"]),
+        "cache_hits": int(after["cache_hits"] - before["cache_hits"]),
+        "pruned": int(after["pruned"] - before["pruned"]),
+    }
+
+
+def run() -> list[tuple]:
+    db = _donor_db()
+    backends = {
+        "bare": AnalyticalRunner(),
+        "cached": CachedRunner(AnalyticalRunner()),
+        "pruning": PruningRunner(CachedRunner(AnalyticalRunner()),
+                                 verify_top_k=VERIFY_TOP_K),
+    }
+    results = {name: _workload(db, r) for name, r in backends.items()}
+
+    base = results["bare"]
+    rows = []
+    for name, r in results.items():
+        reduction = base["evaluations"] / max(r["evaluations"], 1)
+        rows.append((
+            f"runner_cache/{name}",
+            round(r["wall_s"] * 1e6, 1),
+            f"evals={r['evaluations']} hits={r['cache_hits']} pruned={r['pruned']}"
+            f" eval_reduction={reduction:.2f}x speedup={r['speedup']:.2f}x"
+            f" search_s={r['search_time_s']:.1f}",
+        ))
+    cached_reduction = base["evaluations"] / max(results["cached"]["evaluations"], 1)
+    rows.append((
+        "runner_cache/cached_eval_reduction",
+        round(cached_reduction, 2),
+        f"acceptance >=2x: {'PASS' if cached_reduction >= 2.0 else 'FAIL'}",
+    ))
+    common.save_result("runner_cache", {
+        "donors": list(DONOR_SIZES),
+        "targets": list(TARGET_SIZES),
+        "verify_top_k": VERIFY_TOP_K,
+        "backends": results,
+        "cached_eval_reduction": cached_reduction,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run(), "MeasureRunner — cached/pruned measurement backends")

@@ -21,6 +21,7 @@ def main() -> None:
         bench_pool,
         bench_resnet,
         bench_roofline,
+        bench_runner_cache,
         bench_seqlen,
     )
 
@@ -34,6 +35,7 @@ def main() -> None:
         ("Fig.8 mixed pool", bench_pool),
         ("§4.3 ResNet18 from ResNet50 (paper's own models)", bench_resnet),
         ("Roofline (dry-run artifacts)", bench_roofline),
+        ("MeasureRunner cached/pruned backends", bench_runner_cache),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

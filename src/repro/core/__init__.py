@@ -4,6 +4,7 @@ Public API:
     KernelInstance / KernelUse / kernel classes ............ workload.py
     Schedule / concretize / default_schedule ............... schedule.py
     measure / evaluate / model_seconds (v5e cost model) .... cost_model.py
+    MeasureRunner / Analytical|Cached|PruningRunner ........ runner.py
     tune_kernel / tune_model (Ansor analogue) .............. autoscheduler.py
     ScheduleDB / Record .................................... database.py
     transfer_tune / transfer_matrix ........................ transfer.py
@@ -22,15 +23,28 @@ from repro.core.cost_model import (
 )
 from repro.core.database import Record, ScheduleDB
 from repro.core.heuristic import DonorScore, donor_scores, select_donor, top_donors
+from repro.core.runner import (
+    AnalyticalRunner,
+    CachedRunner,
+    MeasureRunner,
+    PruningRunner,
+    RunnerStats,
+    default_runner,
+)
 from repro.core.schedule import ConcreteSchedule, Schedule, ScheduleInvalid, concretize, default_schedule
 from repro.core.transfer import KernelTransfer, TransferResult, transfer_matrix, transfer_tune
 from repro.core.workload import KERNEL_CLASSES, KernelInstance, KernelUse, classes_in, dedup_uses
 
 __all__ = [
     "KERNEL_CLASSES",
+    "AnalyticalRunner",
+    "CachedRunner",
     "ConcreteSchedule",
     "CostBreakdown",
     "DonorScore",
+    "MeasureRunner",
+    "PruningRunner",
+    "RunnerStats",
     "KernelInstance",
     "KernelTransfer",
     "KernelUse",
@@ -46,6 +60,7 @@ __all__ = [
     "classes_in",
     "concretize",
     "dedup_uses",
+    "default_runner",
     "default_schedule",
     "donor_scores",
     "evaluate",

@@ -6,8 +6,9 @@ relies on:
 * per-kernel *tasks*, each searching the schedule space of one workload;
 * evolutionary search: a population of schedules, mutation + crossover,
   ranked by a learned surrogate (ridge regression on schedule features),
-  with only the top candidates sent to "hardware" measurement
-  (:func:`repro.core.cost_model.measure`, seeded-noise analytical model);
+  with only the top candidates sent to "hardware" measurement through a
+  pluggable :class:`repro.core.runner.MeasureRunner` (default: memoized
+  analytical model with seeded noise);
 * a task scheduler that allocates measurement trials across kernels
   proportionally to their share of remaining model time (Ansor §5);
 * a search trace — (cumulative virtual search seconds, best model seconds) —
@@ -24,9 +25,9 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core import cost_model
-from repro.core.cost_model import Measurement, measure
+from repro.core.cost_model import Measurement
 from repro.core.database import Record, ScheduleDB
+from repro.core.runner import MeasureRunner, default_runner, telemetry_delta
 from repro.core.schedule import (
     UNROLL_CHOICES,
     VEC_CHOICES,
@@ -190,13 +191,20 @@ class TuneResult:
     search_time_s: float
     trace: list[TracePoint]
     wall_time_s: float
+    runner_telemetry: dict = dataclasses.field(default_factory=dict)
 
 
 class KernelTask:
-    """Evolutionary search state for one kernel workload."""
+    """Evolutionary search state for one kernel workload.
+
+    Measurement goes through the injected ``runner`` (one may be shared
+    across tasks to pool caching); the default is a fresh memoizing
+    analytical runner.
+    """
 
     def __init__(self, instance: KernelInstance, seed: int, noise_sigma: float = 0.05,
-                 population: int = 32, measure_per_round: int = 8):
+                 population: int = 32, measure_per_round: int = 8,
+                 runner: MeasureRunner | None = None):
         self.instance = instance
         # int(hex_key) not hash(): str hash is salted per process and would
         # make tuning results non-reproducible across runs.
@@ -204,29 +212,36 @@ class KernelTask:
         self.noise_sigma = noise_sigma
         self.population = population
         self.measure_per_round = measure_per_round
+        self.runner = runner if runner is not None else default_runner()
         self.surrogate = Surrogate()
         self.seed = seed
         self.pool: list[tuple[Schedule, float]] = []  # measured (schedule, noisy seconds)
         self.trials = 0
         self.search_time_s = 0.0
         base = default_schedule(instance)
-        m = measure(instance, base, seed=seed, noise_sigma=0.0)
+        m = self.runner.measure(instance, base, seed=seed, noise_sigma=0.0)
         assert m.valid, "default schedule must be valid"
         self.best_schedule: Schedule = base
         self.best_seconds: float = m.seconds
         self.untuned_seconds: float = m.seconds
 
-    def _measure(self, schedule: Schedule) -> Measurement:
-        m = measure(self.instance, schedule, seed=self.seed, noise_sigma=self.noise_sigma)
+    def _record(self, schedule: Schedule, m: Measurement) -> None:
         self.trials += 1
         self.search_time_s += m.measure_cost_s
+        if m.pruned:
+            return
         if m.valid:
             self.pool.append((schedule, m.seconds))
             self.surrogate.add(featurize(schedule, self.instance), m.seconds)
             if m.seconds < self.best_seconds:
                 self.best_seconds = m.seconds
                 self.best_schedule = schedule
-        return m
+
+    def _measure_batch(self, schedules: Sequence[Schedule]) -> None:
+        ms = self.runner.measure_many(self.instance, schedules, seed=self.seed,
+                                      noise_sigma=self.noise_sigma)
+        for s, m in zip(schedules, ms):
+            self._record(s, m)
 
     def step(self, budget_trials: int) -> None:
         """Run measurement rounds until `budget_trials` more trials are spent."""
@@ -252,15 +267,17 @@ class KernelTask:
             pred = self.surrogate.predict(feats)
             ranked = [c for _, c in sorted(zip(pred, candidates), key=lambda t: t[0])]
             n = min(self.measure_per_round, budget_trials - spent)
-            for c in ranked[:n]:
-                self._measure(c)
-                spent += 1
+            self._measure_batch(ranked[:n])
+            spent += n
 
 
 def tune_kernel(instance: KernelInstance, trials: int = 128, seed: int = 0,
-                noise_sigma: float = 0.05) -> TuneResult:
+                noise_sigma: float = 0.05,
+                runner: MeasureRunner | None = None) -> TuneResult:
     t0 = time.monotonic()
-    task = KernelTask(instance, seed=seed, noise_sigma=noise_sigma)
+    runner = runner if runner is not None else default_runner()
+    before = runner.telemetry()
+    task = KernelTask(instance, seed=seed, noise_sigma=noise_sigma, runner=runner)
     trace: list[TracePoint] = []
     batch = max(8, trials // 16)
     while task.trials < trials:
@@ -269,6 +286,7 @@ def tune_kernel(instance: KernelInstance, trials: int = 128, seed: int = 0,
     return TuneResult(
         best=task.best_schedule, best_seconds=task.best_seconds, trials=task.trials,
         search_time_s=task.search_time_s, trace=trace, wall_time_s=time.monotonic() - t0,
+        runner_telemetry=telemetry_delta(runner.telemetry(), before),
     )
 
 
@@ -287,6 +305,7 @@ class ModelTuneResult:
     untuned_seconds: float
     tuned_seconds: float
     trace: list[TracePoint]   # (search time, best *model* seconds)
+    runner_telemetry: dict = dataclasses.field(default_factory=dict)
 
     @property
     def speedup(self) -> float:
@@ -301,6 +320,7 @@ def tune_model(
     noise_sigma: float = 0.05,
     round_trials: int = 16,
     stop_when: Callable[[float, float], bool] | None = None,
+    runner: MeasureRunner | None = None,
 ) -> ModelTuneResult:
     """Tune every kernel of a model under a shared trial budget.
 
@@ -310,10 +330,14 @@ def tune_model(
 
     ``stop_when(search_time_s, model_seconds)`` allows the benchmarks to cut
     the search at a given virtual time or speedup (paper's same-time /
-    time-to-match comparisons).
+    time-to-match comparisons).  One ``runner`` is shared across all kernel
+    tasks, so a memoizing runner dedups measurements model-wide.
     """
     t0 = time.monotonic()
-    tasks = [KernelTask(u.instance, seed=seed, noise_sigma=noise_sigma) for u in uses]
+    runner = runner if runner is not None else default_runner()
+    tele_before = runner.telemetry()
+    tasks = [KernelTask(u.instance, seed=seed, noise_sigma=noise_sigma, runner=runner)
+             for u in uses]
     weights = [u.use_count for u in uses]
     improv = [1.0] * len(tasks)  # optimistic init → round-robin warmup
 
@@ -370,6 +394,7 @@ def tune_model(
         untuned_seconds=untuned,
         tuned_seconds=model_now(),
         trace=trace,
+        runner_telemetry=telemetry_delta(runner.telemetry(), tele_before),
     )
 
 

@@ -71,6 +71,8 @@ class Measurement:
     measure_cost_s: float        # virtual harness time spent (compile + runs)
     breakdown: CostBreakdown | None = None
     adapted: bool = False
+    cached: bool = False         # served from a CachedRunner without re-measuring
+    pruned: bool = False         # dropped by a PruningRunner draft, never built
 
     @property
     def valid(self) -> bool:
@@ -418,11 +420,17 @@ def contextual_model_seconds(uses: Sequence[KernelUse],
     return total
 
 
-def class_proportions(uses: Sequence[KernelUse], spec: ChipSpec = TPU_V5E) -> dict[str, float]:
-    """P_c: share of *untuned* model time per kernel class (paper Table 2)."""
+def class_proportions(uses: Sequence[KernelUse], spec: ChipSpec = TPU_V5E,
+                      seconds_fn=None) -> dict[str, float]:
+    """P_c: share of *untuned* model time per kernel class (paper Table 2).
+
+    ``seconds_fn(instance) -> float`` overrides the untuned-seconds source
+    (e.g. a memoizing MeasureRunner's ``seconds`` query).
+    """
+    fn = seconds_fn or (lambda inst: kernel_seconds(inst, None, spec=spec))
     per_class: dict[str, float] = {}
     for u in uses:
-        sec = u.use_count * kernel_seconds(u.instance, None, spec=spec)
+        sec = u.use_count * fn(u.instance)
         per_class[u.instance.class_id] = per_class.get(u.instance.class_id, 0.0) + sec
     total = sum(per_class.values()) or 1.0
     return {c: s / total for c, s in per_class.items()}

@@ -17,6 +17,7 @@ from typing import Mapping, Sequence
 
 from repro.core.cost_model import class_proportions
 from repro.core.database import ScheduleDB
+from repro.core.runner import MeasureRunner
 from repro.core.workload import KernelUse
 
 
@@ -27,14 +28,23 @@ class DonorScore:
     per_class: tuple[tuple[str, float], ...]  # class -> contribution
 
 
+def _proportions(uses: Sequence[KernelUse], runner: MeasureRunner | None) -> dict[str, float]:
+    """P_c via the injected runner (sharing its noise-free seconds cache),
+    falling back to the bare cost model when no runner is given."""
+    if runner is None:
+        return class_proportions(uses)
+    return class_proportions(uses, seconds_fn=lambda inst: runner.seconds(inst, None))
+
+
 def donor_scores(
     uses: Sequence[KernelUse],
     db: ScheduleDB,
     exclude: Sequence[str] = (),
     proportions: Mapping[str, float] | None = None,
+    runner: MeasureRunner | None = None,
 ) -> list[DonorScore]:
     """Rank all donor models in the DB for this target (descending score)."""
-    p = dict(proportions) if proportions is not None else class_proportions(uses)
+    p = dict(proportions) if proportions is not None else _proportions(uses, runner)
     scores: list[DonorScore] = []
     for model_id in db.models():
         if model_id in exclude:
@@ -54,17 +64,19 @@ def donor_scores(
 
 
 def select_donor(uses: Sequence[KernelUse], db: ScheduleDB,
-                 exclude: Sequence[str] = ()) -> str | None:
-    ranked = donor_scores(uses, db, exclude=exclude)
+                 exclude: Sequence[str] = (),
+                 runner: MeasureRunner | None = None) -> str | None:
+    ranked = donor_scores(uses, db, exclude=exclude, runner=runner)
     if not ranked or ranked[0].score <= 0.0:
         return None
     return ranked[0].model_id
 
 
 def top_donors(uses: Sequence[KernelUse], db: ScheduleDB, k: int = 3,
-               exclude: Sequence[str] = ()) -> list[DonorScore]:
+               exclude: Sequence[str] = (),
+               runner: MeasureRunner | None = None) -> list[DonorScore]:
     """Top-k choices (paper Table 3)."""
-    return donor_scores(uses, db, exclude=exclude)[:k]
+    return donor_scores(uses, db, exclude=exclude, runner=runner)[:k]
 
 
 # ---------------------------------------------------------------------------
@@ -83,10 +95,11 @@ def donor_scores_v2(
     db: ScheduleDB,
     exclude: Sequence[str] = (),
     proportions: Mapping[str, float] | None = None,
+    runner: MeasureRunner | None = None,
 ) -> list[DonorScore]:
     from repro.core.schedule import is_valid
 
-    p = dict(proportions) if proportions is not None else class_proportions(uses)
+    p = dict(proportions) if proportions is not None else _proportions(uses, runner)
     targets_by_class: dict[str, list] = {}
     for u in uses:
         targets_by_class.setdefault(u.instance.class_id, []).append(u.instance)
@@ -116,8 +129,9 @@ def donor_scores_v2(
 
 
 def select_donor_v2(uses: Sequence[KernelUse], db: ScheduleDB,
-                    exclude: Sequence[str] = ()) -> str | None:
-    ranked = donor_scores_v2(uses, db, exclude=exclude)
+                    exclude: Sequence[str] = (),
+                    runner: MeasureRunner | None = None) -> str | None:
+    ranked = donor_scores_v2(uses, db, exclude=exclude, runner=runner)
     if not ranked or ranked[0].score <= 0.0:
         return None
     return ranked[0].model_id

@@ -14,16 +14,21 @@ Modes:
 
 Exact workload hits (same class *and* shapes) reuse the donor schedule with
 zero extra measurements, matching Ansor's workload-ID reuse.
+
+Measurement goes through an injected :class:`repro.core.runner.MeasureRunner`
+(default ``CachedRunner(AnalyticalRunner())``), so repeated donor schedules
+across kernels, matrix cells, and passes are measured once; pass a shared
+runner across calls to pool the cache.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Mapping, Sequence
+from typing import Sequence
 
-from repro.core.cost_model import kernel_seconds, measure
 from repro.core.database import Record, ScheduleDB
-from repro.core.schedule import Schedule, default_schedule
+from repro.core.runner import MeasureRunner, default_runner, telemetry_delta
+from repro.core.schedule import Schedule
 from repro.core.workload import KernelInstance, KernelUse
 
 
@@ -39,6 +44,7 @@ class KernelTransfer:
     candidates: int                  # schedules evaluated
     invalid: int                     # candidates rejected as invalid
     exact_hit: bool                  # Ansor-style exact workload reuse
+    pruned: int = 0                  # candidates dropped by a PruningRunner draft
 
     @property
     def speedup(self) -> float:
@@ -54,6 +60,12 @@ class TransferResult:
     wall_time_s: float
     untuned_seconds: float
     tuned_seconds: float
+    # Measurement telemetry (delta over the injected runner for this call):
+    measurements: int = 0            # full cost-model evaluations performed
+    cache_hits: int = 0
+    cache_misses: int = 0
+    pruned_candidates: int = 0
+    runner_telemetry: dict = dataclasses.field(default_factory=dict)
 
     @property
     def speedup(self) -> float:
@@ -78,6 +90,19 @@ class TransferResult:
         return covered / self.untuned_seconds if self.untuned_seconds else 0.0
 
 
+def _strongest_first(candidates: list[Record], limit: int,
+                     runner: MeasureRunner) -> list[Record]:
+    """Truncate the donor pool keeping the strongest donors — ``db.by_class``
+    order is (model_id, seconds), so a naive ``[:limit]`` would keep
+    whichever models sort first alphabetically.  Strength is the recorded
+    seconds *relative to the donor workload's own untuned seconds* (its
+    speedup at home): raw seconds are only comparable within one workload
+    shape, and would bias a mixed pool toward small donors."""
+    def strength(r: Record) -> float:
+        return r.seconds / runner.seconds(r.instance, None)
+    return sorted(candidates, key=strength)[:limit]
+
+
 def transfer_tune(
     uses: Sequence[KernelUse],
     db: ScheduleDB,
@@ -88,50 +113,63 @@ def transfer_tune(
     seed: int = 0,
     noise_sigma: float = 0.05,
     max_candidates_per_kernel: int | None = None,
+    runner: MeasureRunner | None = None,
 ) -> TransferResult:
     """Transfer-tune a target model from donor schedules in ``db``.
 
     ``donors=None`` uses the full pool (paper §5.5 "mixed"); a single-element
-    list is the paper's default one-to-one setting.
+    list is the paper's default one-to-one setting.  ``runner`` injects the
+    measurement backend; the default is a fresh memoizing analytical runner.
     """
     t0 = time.monotonic()
+    runner = runner if runner is not None else default_runner()
+    before = runner.telemetry()
     kernels: list[KernelTransfer] = []
     search_time = 0.0
     for u in uses:
         inst = u.instance
-        untuned = kernel_seconds(inst, None)
+        untuned = runner.seconds(inst, None)
         exact = db.exact(inst)
         if exact is not None and (donors is None or exact.model_id in donors):
-            # Ansor workload-ID reuse: no measurement needed.
-            m = measure(inst, exact.schedule, mode="strict", seed=seed, noise_sigma=0.0)
+            # Ansor workload-ID reuse: no measurement needed — the noise-free
+            # seconds query charges nothing and counts as zero measurements.
             kernels.append(KernelTransfer(
                 instance=inst, chosen=exact.schedule, chosen_from=exact.model_id,
-                seconds=m.seconds, untuned_seconds=untuned,
+                seconds=runner.seconds(inst, exact.schedule, mode="strict"),
+                untuned_seconds=untuned,
                 candidates=0, invalid=0, exact_hit=True,
             ))
             continue
         candidates = db.by_class(inst.class_id, models=donors)
         if max_candidates_per_kernel is not None:
-            candidates = candidates[:max_candidates_per_kernel]
-        best_secs, best_sched, best_model, invalid = untuned, None, "", 0
-        for rec in candidates:
-            m = measure(inst, rec.schedule, mode=mode, seed=seed, noise_sigma=noise_sigma)
+            candidates = _strongest_first(candidates, max_candidates_per_kernel, runner)
+        measured = runner.measure_many(
+            inst, [rec.schedule for rec in candidates],
+            mode=mode, seed=seed, noise_sigma=noise_sigma)
+        best_secs, best_sched, best_model = untuned, None, ""
+        invalid = pruned = 0
+        for rec, m in zip(candidates, measured):
             search_time += m.measure_cost_s
+            if m.pruned:
+                pruned += 1
+                continue
             if not m.valid:
                 invalid += 1
                 continue
             if m.seconds < best_secs:
                 best_secs, best_sched, best_model = m.seconds, rec.schedule, rec.model_id
         final_secs = (
-            kernel_seconds(inst, best_sched, mode=mode) if best_sched is not None else untuned
+            runner.seconds(inst, best_sched, mode=mode) if best_sched is not None else untuned
         )
         kernels.append(KernelTransfer(
             instance=inst, chosen=best_sched, chosen_from=best_model,
             seconds=final_secs, untuned_seconds=untuned,
             candidates=len(candidates), invalid=invalid, exact_hit=False,
+            pruned=pruned,
         ))
     untuned_total = sum(u.use_count * k.untuned_seconds for u, k in zip(uses, kernels))
     tuned_total = sum(u.use_count * k.seconds for u, k in zip(uses, kernels))
+    delta = telemetry_delta(runner.telemetry(), before)
     return TransferResult(
         model_id=model_id,
         kernels=kernels,
@@ -140,6 +178,11 @@ def transfer_tune(
         wall_time_s=time.monotonic() - t0,
         untuned_seconds=untuned_total,
         tuned_seconds=tuned_total,
+        measurements=int(delta.get("measurements", 0)),
+        cache_hits=int(delta.get("cache_hits", 0)),
+        cache_misses=int(delta.get("cache_misses", 0)),
+        pruned_candidates=int(delta.get("pruned", 0)),
+        runner_telemetry=delta,
     )
 
 
@@ -149,17 +192,28 @@ def transfer_matrix(
     donors: Sequence[str] | None = None,
     mode: str = "strict",
     seed: int = 0,
+    runner: MeasureRunner | None = None,
 ) -> dict[str, dict[str, float | None]]:
     """Paper Fig. 4: per-(target kernel × donor schedule) standalone seconds.
 
     Returns {target workload_key: {donor record key: seconds | None(invalid)}}.
+    Cells a :class:`PruningRunner` drafts away are omitted entirely — they
+    were never evaluated, so recording them as ``None`` would conflate them
+    with the paper's invalid (-1) transfers.  Sharing ``runner`` with a
+    subsequent :func:`transfer_tune` call makes the tune pass free — every
+    cell is already cached.
     """
+    runner = runner if runner is not None else default_runner()
     out: dict[str, dict[str, float | None]] = {}
     for u in uses:
         row: dict[str, float | None] = {}
-        for rec in db.by_class(u.instance.class_id, models=donors):
+        recs = db.by_class(u.instance.class_id, models=donors)
+        measured = runner.measure_many(
+            u.instance, [rec.schedule for rec in recs], mode=mode, seed=seed)
+        for rec, m in zip(recs, measured):
+            if m.pruned:
+                continue
             key = f"{rec.model_id}/{rec.instance.workload_key()}"
-            m = measure(u.instance, rec.schedule, mode=mode, seed=seed)
             row[key] = m.seconds
         out[u.instance.workload_key()] = row
     return out

@@ -17,6 +17,7 @@ from repro.core.autoscheduler import ModelTuneResult, tune_model
 from repro.core.database import ScheduleDB
 from repro.core.extract import extract_kernels
 from repro.core.heuristic import select_donor, select_donor_v2, top_donors
+from repro.core.runner import MeasureRunner, default_runner
 from repro.core.transfer import TransferResult, transfer_tune
 from repro.core.workload import KernelUse
 
@@ -28,10 +29,11 @@ def arch_uses(arch: str, shape: str = "train_4k", *, dp: int = 1, tp: int = 1
 
 def tune_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
               dp: int = 1, tp: int = 1, total_trials: int = 1024, seed: int = 0,
-              **kw) -> ModelTuneResult:
+              runner: MeasureRunner | None = None, **kw) -> ModelTuneResult:
     """Full auto-scheduling of one arch; records land in `db` under the arch id."""
     uses = arch_uses(arch, shape, dp=dp, tp=tp)
-    res = tune_model(uses, model_id=arch, total_trials=total_trials, seed=seed, **kw)
+    res = tune_model(uses, model_id=arch, total_trials=total_trials, seed=seed,
+                     runner=runner, **kw)
     for r in res.records:
         db.add(r)
     return res
@@ -39,23 +41,30 @@ def tune_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
 
 def transfer_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
                   dp: int = 1, tp: int = 1, donors: Sequence[str] | None | str = "auto",
-                  mode: str = "strict", seed: int = 0, **kw) -> TransferResult:
+                  mode: str = "strict", seed: int = 0,
+                  runner: MeasureRunner | None = None, **kw) -> TransferResult:
     """Transfer-tune one arch from donor schedules.
 
     donors="auto" applies the Eq. 1 heuristic (excluding the arch itself);
     donors="auto2" the beyond-paper compatibility-aware variant;
     donors=None uses the full mixed pool (paper §5.5); otherwise a list.
+
+    One ``runner`` (default: memoizing analytical) serves both donor
+    selection and the transfer pass, so the untuned-seconds queries Eq. 1
+    makes are never recomputed by the transfer loop.
     """
     uses = arch_uses(arch, shape, dp=dp, tp=tp)
+    runner = runner if runner is not None else default_runner()
     if donors in ("auto", "auto2"):
         pick = select_donor_v2 if donors == "auto2" else select_donor
-        best = pick(uses, db, exclude=(arch,))
+        best = pick(uses, db, exclude=(arch,), runner=runner)
         donors = [best] if best is not None else []
     return transfer_tune(uses, db, model_id=arch, donors=donors, mode=mode,
-                         seed=seed, **kw)
+                         seed=seed, runner=runner, **kw)
 
 
 def donor_ranking(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
-                  dp: int = 1, tp: int = 1, k: int = 3):
+                  dp: int = 1, tp: int = 1, k: int = 3,
+                  runner: MeasureRunner | None = None):
     uses = arch_uses(arch, shape, dp=dp, tp=tp)
-    return top_donors(uses, db, k=k, exclude=(arch,))
+    return top_donors(uses, db, k=k, exclude=(arch,), runner=runner)

@@ -1,8 +1,11 @@
 """Flash-attention kernel + chunked oracle vs naive attention."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core.schedule import Schedule, concretize

@@ -1,9 +1,12 @@
 """Pallas matmul kernel vs pure-jnp oracle: shape/dtype/schedule sweeps."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core.schedule import Schedule, concretize

@@ -1,4 +1,8 @@
 """Recurrent-scan kernels (rwkv6 wkv, RG-LRU) vs lax.scan oracles."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

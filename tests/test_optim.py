@@ -1,4 +1,8 @@
 """Optimizer + gradient compression."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,227 @@
+"""MeasureRunner subsystem: caching transparency, pruning safety, telemetry."""
+import random
+
+import pytest
+
+from repro.core.autoscheduler import random_schedule, tune_kernel
+from repro.core.cost_model import kernel_seconds, measure
+from repro.core.database import Record, ScheduleDB
+from repro.core.runner import (
+    AnalyticalRunner,
+    CachedRunner,
+    PruningRunner,
+    default_runner,
+    telemetry_delta,
+)
+from repro.core.schedule import Schedule, default_schedule
+from repro.core.transfer import transfer_matrix, transfer_tune
+from repro.core.workload import KernelInstance, KernelUse
+
+
+def g(m=512, n=512, k=512):
+    return KernelInstance.make("matmul", M=m, N=n, K=k)
+
+
+def _schedules(inst, n=12, seed=0):
+    rng = random.Random(seed)
+    return [default_schedule(inst)] + [random_schedule(inst, rng) for _ in range(n - 1)]
+
+
+# ---------------------------------------------------------------------------
+# (a) CachedRunner is bit-transparent over AnalyticalRunner
+# ---------------------------------------------------------------------------
+
+
+def test_cached_runner_bit_identical_to_analytical():
+    inst = g()
+    bare, cached = AnalyticalRunner(), CachedRunner(AnalyticalRunner())
+    for sched in _schedules(inst):
+        a = bare.measure(inst, sched, seed=3)
+        b = cached.measure(inst, sched, seed=3)
+        assert a.seconds == b.seconds
+        assert a.measure_cost_s == b.measure_cost_s
+        assert a.breakdown == b.breakdown
+        assert a.valid == b.valid and a.adapted == b.adapted
+
+
+def test_cached_runner_matches_direct_measure():
+    inst = g(768, 768, 768)
+    r = default_runner()
+    for sched in _schedules(inst, seed=1):
+        m = r.measure(inst, sched, mode="strict", seed=0, noise_sigma=0.05)
+        direct = measure(inst, sched, mode="strict", seed=0, noise_sigma=0.05)
+        assert m.seconds == direct.seconds
+
+
+# ---------------------------------------------------------------------------
+# (b) cache hits charge measure_cost_s exactly once per unique key
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_charges_cost_once_per_unique_key():
+    inst = g()
+    sched = default_schedule(inst)
+    r = CachedRunner(AnalyticalRunner())
+    first = r.measure(inst, sched, seed=0)
+    assert first.measure_cost_s > 0 and not first.cached
+    for _ in range(3):
+        hit = r.measure(inst, sched, seed=0)
+        assert hit.measure_cost_s == 0.0 and hit.cached
+        assert hit.seconds == first.seconds
+    assert r.stats.cache_misses == 1 and r.stats.cache_hits == 3
+    # the inner runner evaluated the cost model exactly once
+    assert r.inner.stats.measurements == 1
+    assert r.inner.stats.measure_cost_s == first.measure_cost_s
+
+
+def test_cache_key_includes_mode_seed_and_sigma():
+    inst = g()
+    sched = default_schedule(inst)
+    r = CachedRunner(AnalyticalRunner())
+    r.measure(inst, sched, seed=0, noise_sigma=0.05)
+    r.measure(inst, sched, seed=1, noise_sigma=0.05)     # new seed -> miss
+    r.measure(inst, sched, seed=0, noise_sigma=0.0)      # new sigma -> miss
+    r.measure(inst, sched, mode="adaptive", seed=0, noise_sigma=0.05)
+    assert r.stats.cache_hits == 0 and r.stats.cache_misses == 4
+
+
+def test_cached_seconds_query_is_memoized():
+    inst = g()
+    r = CachedRunner(AnalyticalRunner())
+    a = r.seconds(inst, None)
+    b = r.seconds(inst, None)
+    assert a == b == kernel_seconds(inst, None)
+
+
+# ---------------------------------------------------------------------------
+# (c) PruningRunner: winner-preserving when verify_top_k covers the batch
+# ---------------------------------------------------------------------------
+
+
+def _winner(measured, schedules):
+    best = None
+    for s, m in zip(schedules, measured):
+        if m.valid and (best is None or m.seconds < best[1]):
+            best = (s, m.seconds)
+    return best
+
+
+def test_pruning_runner_full_verify_preserves_winner():
+    inst = g(1024, 1024, 1024)
+    schedules = _schedules(inst, n=10, seed=2)
+    bare = AnalyticalRunner()
+    reference = _winner(bare.measure_many(inst, schedules, seed=0), schedules)
+    pr = PruningRunner(CachedRunner(AnalyticalRunner()),
+                       verify_top_k=len(schedules))
+    pruned = _winner(pr.measure_many(inst, schedules, seed=0), schedules)
+    assert pruned == reference
+    assert pr.stats.pruned == 0
+
+
+def test_pruning_runner_charges_only_verified():
+    inst = g(1024, 1024, 1024)
+    schedules = _schedules(inst, n=12, seed=4)
+    pr = PruningRunner(AnalyticalRunner(), verify_top_k=3)
+    ms = pr.measure_many(inst, schedules, seed=0)
+    verified = [m for m in ms if m.valid]
+    dropped = [m for m in ms if m.pruned]
+    assert len(verified) <= 3
+    assert all(m.measure_cost_s == 0.0 for m in dropped)
+    assert pr.inner.stats.measurements <= 3
+    assert pr.stats.drafts == len(schedules)
+
+
+def test_pruning_runner_draft_catches_invalid_statically():
+    inst = g(96, 96, 96)
+    bad = Schedule.make("matmul", {"M": 128, "N": 128, "K": 1024})  # K > 96
+    pr = PruningRunner(AnalyticalRunner(), verify_top_k=4)
+    ms = pr.measure_many(inst, [bad, default_schedule(inst)], seed=0)
+    assert ms[0].seconds is None and not ms[0].pruned
+    assert ms[1].valid
+    assert pr.inner.stats.measurements == 1  # the invalid one never built
+
+
+# ---------------------------------------------------------------------------
+# Integration: transfer stack over the runner seam
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_db():
+    db = ScheduleDB()
+    for size, model in ((512, "d512"), (1024, "d1024"), (1536, "d1536")):
+        res = tune_kernel(g(size, size, size), trials=64, seed=0)
+        db.add(Record(g(size, size, size), res.best, res.best_seconds, model))
+    return db
+
+
+def test_transfer_tune_default_runner_identical_to_bare(small_db):
+    target = [KernelUse(g(2048, 2048, 2048)), KernelUse(g(256, 256, 256))]
+    default = transfer_tune(target, small_db)
+    bare = transfer_tune(target, small_db, runner=AnalyticalRunner())
+    assert default.tuned_seconds == bare.tuned_seconds
+    assert default.search_time_s == bare.search_time_s
+    assert [k.chosen for k in default.kernels] == [k.chosen for k in bare.kernels]
+    assert default.measurements == default.cache_misses > 0
+
+
+def test_shared_runner_makes_matrix_then_tune_free(small_db):
+    target = [KernelUse(g(2048, 2048, 2048))]
+    runner = default_runner()
+    before = runner.telemetry()
+    transfer_matrix(target, small_db, runner=runner)
+    mid = runner.telemetry()
+    tt = transfer_tune(target, small_db, runner=runner)
+    after = runner.telemetry()
+    assert telemetry_delta(mid, before)["measurements"] > 0
+    # every tune-pass cell was already measured by the matrix pass
+    assert telemetry_delta(after, mid)["measurements"] == 0
+    assert tt.cache_hits == tt.kernels[0].candidates
+    assert tt.search_time_s == 0.0
+
+
+def test_pruning_runner_transfer_winner_safe(small_db):
+    target = [KernelUse(g(2048, 2048, 2048))]
+    full = transfer_tune(target, small_db)
+    pruned = transfer_tune(
+        target, small_db,
+        runner=PruningRunner(CachedRunner(), verify_top_k=len(small_db.records())))
+    assert pruned.kernels[0].chosen == full.kernels[0].chosen
+    assert pruned.tuned_seconds == full.tuned_seconds
+
+
+def test_transfer_matrix_omits_pruned_cells(small_db):
+    """Pruned cells must not masquerade as invalid (-1) transfers."""
+    target = [KernelUse(g(2048, 2048, 2048))]
+    full = transfer_matrix(target, small_db)
+    pruned = transfer_matrix(
+        target, small_db, runner=PruningRunner(CachedRunner(), verify_top_k=1))
+    full_row = next(iter(full.values()))
+    pruned_row = next(iter(pruned.values()))
+    assert len(pruned_row) < len(full_row)
+    assert all(v is not None or full_row[k] is None for k, v in pruned_row.items())
+
+
+def test_max_candidates_keeps_strongest_donors(small_db):
+    """Truncation must keep the strongest donors (best speedup on their own
+    workload — raw seconds would bias toward small shapes), not insertion
+    order."""
+    recs = sorted(small_db.by_class("matmul"),
+                  key=lambda r: r.seconds / kernel_seconds(r.instance, None))
+    target = [KernelUse(g(2048, 2048, 2048))]
+    limited = transfer_tune(target, small_db, max_candidates_per_kernel=1)
+    unlimited = transfer_tune(target, small_db)
+    assert limited.kernels[0].candidates == 1
+    # the single surviving candidate is the strongest-at-home record
+    if limited.kernels[0].chosen is not None:
+        assert limited.kernels[0].chosen == recs[0].schedule
+    # never worse than what the weakest single donor would give
+    assert limited.tuned_seconds >= unlimited.tuned_seconds - 1e-12
+
+
+def test_exact_hit_counts_zero_measurements(small_db):
+    """Ansor workload-ID reuse must not appear in measurement telemetry."""
+    tt = transfer_tune([KernelUse(g(512, 512, 512))], small_db)
+    assert tt.kernels[0].exact_hit
+    assert tt.measurements == 0 and tt.search_time_s == 0.0
+    assert tt.runner_telemetry["measure_cost_s"] == 0.0

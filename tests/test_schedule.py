@@ -1,6 +1,9 @@
 """Property tests for the schedule IR (paper §4.1-4.2 semantics)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.schedule import (
