@@ -1,0 +1,125 @@
+"""Online schedule-registry service: cold-start serve stream benchmark.
+
+A target arch is served cold against a registry holding only a donor arch's
+auto-schedules.  Each "request" resolves every kernel of the target through
+:class:`~repro.service.TuningService.lookup` and sums the resulting
+cost-model kernel seconds; between requests a bounded number of background
+transfer-tuning jobs drain and publish, so the stream's kernel seconds
+improve as upgrades land (the acceptance trajectory).
+
+Reported:
+
+* per-request kernel seconds (the trajectory) + first/last improvement;
+* ``stats()`` telemetry — upgrades, hit tiers, virtual search seconds;
+* equivalence: the drained service must serve *identical* schedules to an
+  offline :func:`~repro.core.tuner.transfer_arch` run over the same donor
+  store, mode, seed, and budget.
+
+``--preset smoke`` (CI) tunes the donor at a small trial budget; ``full``
+uses two donors and a larger budget.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+
+from benchmarks import common
+from repro.core.runner import AnalyticalRunner, CachedRunner
+from repro.core.tuner import arch_uses, transfer_arch, tune_arch_registry
+from repro.service import ScheduleRegistry, TuningService
+
+TARGET = "stablelm-12b"
+PRESETS = {
+    # donor archs share every kernel class with the target (internvl2) or a
+    # subset (starcoder2), so transfers land on all / most classes.
+    "smoke": {"donors": ["internvl2-26b"], "trials": 256, "requests": 6,
+              "jobs_per_request": 2},
+    "full": {"donors": ["internvl2-26b", "starcoder2-7b"], "trials": 768,
+             "requests": 10, "jobs_per_request": 2},
+}
+
+
+def run(preset: str = "smoke") -> list[tuple]:
+    p = PRESETS[preset]
+    uses = arch_uses(TARGET, common.SHAPE, dp=common.DP, tp=common.TP)
+    root = tempfile.mkdtemp(prefix="schedule-registry-")
+    try:
+        registry = ScheduleRegistry(root)
+        for donor in p["donors"]:
+            tune_arch_registry(registry, donor, common.SHAPE, dp=common.DP,
+                               tp=common.TP, total_trials=p["trials"],
+                               seed=common.SEED)
+        donor_db = registry.snapshot().db(None)  # frozen for the offline run
+
+        # Cold-start stream: probes disabled so the trajectory isolates the
+        # background-upgrade path (first request = untuned, upgrades land
+        # between requests).  max_workers=0 defers jobs to drain() — the
+        # deterministic stepping; serve.py uses the threaded pool.
+        runner = CachedRunner(AnalyticalRunner())
+        service = TuningService(registry, model_id=TARGET, runner=runner,
+                                donors=list(p["donors"]), seed=common.SEED,
+                                max_workers=0, probe_candidates=0)
+        trajectory: list[float] = []
+        hit_rates: list[float] = []
+        for _ in range(p["requests"]):
+            lookups = [service.lookup(u.instance) for u in uses]
+            trajectory.append(
+                sum(u.use_count * r.seconds for u, r in zip(uses, lookups)))
+            hit_rates.append(
+                sum(1 for r in lookups if r.tier == "exact") / len(lookups))
+            service.drain(max_jobs=p["jobs_per_request"])
+        service.drain()
+        final = {u.instance.workload_key(): service.lookup(u.instance)
+                 for u in uses}
+        stats = service.stats()
+
+        # Offline equivalence: same donors, mode, seed, unlimited budget.
+        offline = transfer_arch(donor_db, TARGET, common.SHAPE, dp=common.DP,
+                                tp=common.TP, donors=list(p["donors"]),
+                                mode="strict", seed=common.SEED)
+        mismatches = sum(
+            1 for k in offline.kernels
+            if final[k.instance.workload_key()].schedule != k.chosen)
+
+        improvement = trajectory[0] / trajectory[-1]
+        untuned = sum(u.use_count * runner.seconds(u.instance, None) for u in uses)
+        rows = [
+            ("service/first_request_s", round(trajectory[0] * 1e6, 1),
+             f"untuned_s={untuned:.4f} exact_hit_rate={hit_rates[0]:.2f}"),
+            ("service/last_request_s", round(trajectory[-1] * 1e6, 1),
+             f"exact_hit_rate={hit_rates[-1]:.2f} upgrades={stats['upgrades']}"),
+            ("service/stream_improvement", round(improvement, 3),
+             f"acceptance >1 with rising hits: "
+             f"{'PASS' if improvement > 1 and hit_rates[-1] > hit_rates[0] and stats['upgrades'] > 0 else 'FAIL'}"),
+            ("service/offline_equivalence", mismatches,
+             f"schedules differing from offline transfer_arch: "
+             f"{'PASS' if mismatches == 0 else 'FAIL'}"),
+            ("service/search_seconds", round(stats["search_seconds_spent"], 1),
+             f"offline search_s={offline.search_time_s:.1f} "
+             f"jobs={stats['jobs_completed']} deduped={stats['jobs_deduped']}"),
+        ]
+        common.save_result("service", {
+            "preset": preset,
+            "target": TARGET,
+            "donors": p["donors"],
+            "trials": p["trials"],
+            "untuned_seconds": untuned,
+            "trajectory_seconds": trajectory,
+            "exact_hit_rates": hit_rates,
+            "stream_improvement": improvement,
+            "offline_mismatches": mismatches,
+            "offline_search_s": offline.search_time_s,
+            "stats": stats,
+            "registry": registry.stats(),
+        })
+        return rows
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    args = ap.parse_args()
+    common.emit(run(args.preset), "Schedule-registry service — cold-start serve stream")

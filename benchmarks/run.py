@@ -23,6 +23,7 @@ def main() -> None:
         bench_roofline,
         bench_runner_cache,
         bench_seqlen,
+        bench_service,
     )
 
     suites = [
@@ -36,6 +37,7 @@ def main() -> None:
         ("§4.3 ResNet18 from ResNet50 (paper's own models)", bench_resnet),
         ("Roofline (dry-run artifacts)", bench_roofline),
         ("MeasureRunner cached/pruned backends", bench_runner_cache),
+        ("Schedule-registry service cold-start stream", bench_service),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

@@ -19,6 +19,30 @@ from typing import Iterable, Mapping, Sequence
 from repro.core.schedule import Schedule
 from repro.core.workload import KernelInstance
 
+#: On-disk schema version shared by every schedule store (the monolithic
+#: ScheduleDB JSON payload and the registry's manifest / segment headers).
+SCHEMA_VERSION = 1
+
+
+class UnknownSchemaVersion(ValueError):
+    """A persisted schedule payload declares a version this code can't read."""
+
+
+def check_schema_version(payload: Mapping, *, source: str) -> None:
+    """Validate the ``version`` field of a persisted payload.
+
+    Raises :class:`UnknownSchemaVersion` with a readable message naming the
+    offending file/segment; a missing field is treated as unknown too (the
+    pre-versioned era never shipped, so absence means corruption).
+    """
+    v = payload.get("version")
+    if v != SCHEMA_VERSION:
+        raise UnknownSchemaVersion(
+            f"{source}: unsupported schema version {v!r} "
+            f"(this build reads version {SCHEMA_VERSION}); "
+            "regenerate the store or upgrade the reader"
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class Record:
@@ -62,12 +86,27 @@ class ScheduleDB:
 
     def __init__(self, records: Iterable[Record] = ()):
         self._by_workload: dict[tuple[str, str], list[Record]] = {}
+        self._best: dict[str, Record] = {}   # workload -> best record (any model)
+        self._frozen = False
         for r in records:
             self.add(r)
 
+    def freeze(self) -> "ScheduleDB":
+        """Make the DB read-only (adds raise) — shared snapshot views."""
+        self._frozen = True
+        return self
+
     # -- mutation -----------------------------------------------------------
     def add(self, record: Record) -> None:
-        key = (record.instance.workload_key(), record.model_id)
+        if self._frozen:
+            raise RuntimeError(
+                "ScheduleDB is frozen (a registry snapshot view is shared and "
+                "immutable) — copy it with ScheduleDB(db.records()) to mutate")
+        wk = record.instance.workload_key()
+        cur = self._best.get(wk)
+        if cur is None or record.seconds < cur.seconds:
+            self._best[wk] = record
+        key = (wk, record.model_id)
         bucket = self._by_workload.setdefault(key, [])
         for i, r in enumerate(bucket):
             if r.schedule == record.schedule:
@@ -100,10 +139,13 @@ class ScheduleDB:
         return sorted({m for (_w, m) in self._by_workload})
 
     def exact(self, instance: KernelInstance) -> Record | None:
-        """Best record for this exact workload (any model) — Ansor reuse."""
-        wk = instance.workload_key()
-        hits = [rs[0] for (k, _m), rs in self._by_workload.items() if k == wk and rs]
-        return min(hits, key=lambda r: r.seconds) if hits else None
+        """Best record for this exact workload (any model) — Ansor reuse.
+
+        O(1): the best-per-workload index is maintained by ``add`` (bucket
+        truncation only ever drops non-best records, so it stays exact),
+        keeping the serving path's per-kernel resolution constant-time.
+        """
+        return self._best.get(instance.workload_key())
 
     def by_class(self, class_id: str, models: Sequence[str] | None = None) -> list[Record]:
         """All schedules of a class — the transfer-tuning candidate pool."""
@@ -129,7 +171,8 @@ class ScheduleDB:
 
     # -- persistence ----------------------------------------------------------
     def save(self, path: str) -> None:
-        payload = {"version": 1, "records": [r.to_json() for r in self.records()]}
+        payload = {"version": SCHEMA_VERSION,
+                   "records": [r.to_json() for r in self.records()]}
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -145,6 +188,7 @@ class ScheduleDB:
     def load(path: str) -> "ScheduleDB":
         with open(path) as f:
             payload = json.load(f)
+        check_schema_version(payload, source=path)
         return ScheduleDB(Record.from_json(d) for d in payload["records"])
 
     @staticmethod

@@ -14,7 +14,7 @@ from typing import Sequence
 
 from repro.configs.base import get_arch, get_shape
 from repro.core.autoscheduler import ModelTuneResult, tune_model
-from repro.core.database import ScheduleDB
+from repro.core.database import Record, ScheduleDB
 from repro.core.extract import extract_kernels
 from repro.core.heuristic import select_donor, select_donor_v2, top_donors
 from repro.core.runner import MeasureRunner, default_runner
@@ -61,6 +61,44 @@ def transfer_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
         donors = [best] if best is not None else []
     return transfer_tune(uses, db, model_id=arch, donors=donors, mode=mode,
                          seed=seed, runner=runner, **kw)
+
+
+def tune_arch_registry(registry, arch: str, shape: str = "train_4k", *,
+                       mode: str = "strict", **kw) -> ModelTuneResult:
+    """:func:`tune_arch` writing through a schedule registry.
+
+    The arch's records land as one atomically published segment — the
+    online-store analogue of merging a freshly tuned ScheduleDB.  ``registry``
+    is a :class:`repro.service.ScheduleRegistry` (duck-typed to avoid a
+    core → service import cycle).
+    """
+    db = ScheduleDB()
+    res = tune_arch(db, arch, shape, **kw)
+    registry.merge_db(db, mode=mode)
+    return res
+
+
+def transfer_arch_registry(registry, arch: str, shape: str = "train_4k", *,
+                           mode: str = "strict", publish: bool = True,
+                           **kw) -> TransferResult:
+    """:func:`transfer_arch` reading donors from — and publishing chosen
+    schedules back to — a schedule registry.
+
+    The donor pool is the registry's current snapshot (all modes; candidates
+    are re-validated under ``mode`` by measurement).  With ``publish=True``
+    every kernel's chosen schedule is published under the arch id in one
+    atomic segment, so a subsequent :class:`~repro.service.TuningService`
+    serves them as exact hits.
+    """
+    db = registry.snapshot().db(None)
+    res = transfer_arch(db, arch, shape, mode=mode, **kw)
+    if publish:
+        registry.publish(
+            [Record(instance=k.instance, schedule=k.chosen, seconds=k.seconds,
+                    model_id=arch)
+             for k in res.kernels if k.chosen is not None],
+            mode=mode)
+    return res
 
 
 def donor_ranking(db: ScheduleDB, arch: str, shape: str = "train_4k", *,

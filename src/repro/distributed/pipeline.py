@@ -24,6 +24,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+if hasattr(jax, "shard_map"):                     # jax >= 0.6
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:                                             # jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    _shard_map = functools.partial(_experimental_shard_map, check_rep=False)
+
 
 def bubble_fraction(n_stages: int, n_micro: int) -> float:
     return (n_stages - 1) / (n_micro + n_stages - 1)
@@ -84,12 +91,11 @@ def pipeline_apply(
 
     in_specs = (P(axis), P())          # params: stage-sharded; micro: replicated
     out_specs = P()                    # outputs gathered (replicated) per stage
-    fn = jax.shard_map(
+    fn = _shard_map(
         lambda p, m: per_stage(jax.tree_util.tree_map(lambda l: l[0], p), m),
         mesh=mesh,
         in_specs=in_specs,
         out_specs=out_specs,
-        check_vma=False,
     )
     outs = fn(stage_params, micro)
     return outs.reshape(b, *x.shape[1:])

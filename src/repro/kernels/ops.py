@@ -57,34 +57,64 @@ def use_backend(backend: str):
 class ScheduleProvider:
     """Resolves the schedule for each kernel instance the model emits.
 
-    ``schedule_map``: workload_key -> Schedule (e.g. from
-    TransferResult.schedule_map() or native tuning records).  Lookup order:
-    exact workload hit → validated as-is; otherwise the untuned default.
-    Invalid entries (e.g. a transferred schedule that does not concretize
-    strictly) fall back to the default — execution never fails on a bad DB.
+    Two sources, either or both may be set:
+
+    * ``schedule_map``: workload_key -> Schedule (e.g. from
+      TransferResult.schedule_map() or native tuning records) — a frozen,
+      offline-produced mapping;
+    * ``service``: a :class:`repro.service.TuningService` — the online path.
+      Each resolution goes through the service's tiered lookup (exact →
+      transfer probe → default), and misses enqueue background tuning jobs,
+      so repeated resolutions upgrade as jobs publish to the registry.
+
+    Lookup order: service (when set) → static map → untuned default.  Invalid
+    entries (e.g. a transferred schedule that does not concretize strictly)
+    fall back to the default — execution never fails on a bad DB.
     """
 
     def __init__(self, schedule_map: Mapping[str, Schedule] | None = None,
-                 mode: str = "strict"):
+                 mode: str = "strict", service=None):
         self.schedule_map = dict(schedule_map or {})
         self.mode = mode
+        self.service = service
         self.hits = 0
         self.misses = 0
 
+    def _try(self, sched: Schedule | None, instance: KernelInstance
+             ) -> ConcreteSchedule | None:
+        if sched is None:
+            return None
+        try:
+            return concretize(sched, instance, mode=self.mode)
+        except ScheduleInvalid:
+            return None
+
     def get(self, instance: KernelInstance) -> ConcreteSchedule:
-        sched = self.schedule_map.get(instance.workload_key())
-        if sched is not None:
-            try:
-                cs = concretize(sched, instance, mode=self.mode)
+        if self.service is not None:
+            cs = self._try(self.service.lookup(instance).schedule, instance)
+            if cs is not None:
                 self.hits += 1
                 return cs
-            except ScheduleInvalid:
-                pass
+        cs = self._try(self.schedule_map.get(instance.workload_key()), instance)
+        if cs is not None:
+            self.hits += 1
+            return cs
         self.misses += 1
         return concretize(default_schedule(instance), instance)
 
 
 _DEFAULT_PROVIDER = ScheduleProvider()
+
+
+def set_default_provider(provider: ScheduleProvider | None) -> ScheduleProvider:
+    """Install the provider kernels use when no explicit one is passed.
+
+    Returns the previous default so callers can restore it.  ``None``
+    reinstalls an empty (all-defaults) provider."""
+    global _DEFAULT_PROVIDER
+    prev = _DEFAULT_PROVIDER
+    _DEFAULT_PROVIDER = provider if provider is not None else ScheduleProvider()
+    return prev
 
 
 def _resolve(provider: ScheduleProvider | None) -> ScheduleProvider:

@@ -1,8 +1,19 @@
 """Serving driver: batched inference with continuous batching.
 
-Loads a (reduced or full) arch, optionally a transfer-tuned schedule DB,
-and runs a stream of requests through the slot-based engine, reporting
-throughput and per-request latency.
+Loads a (reduced or full) arch and runs a stream of requests through the
+slot-based engine, reporting throughput and per-request latency.
+
+Schedule resolution is pluggable:
+
+* ``--tuning-db db.json`` — frozen offline store: a ScheduleDB snapshot is
+  loaded once and installed as a static provider (the pre-registry path).
+* ``--tuning-registry DIR`` — online path: kernels resolve through a
+  :class:`~repro.service.TuningService` over a segmented
+  :class:`~repro.service.ScheduleRegistry`.  Unseen workloads are served
+  untuned *once*, background transfer-tuning jobs publish upgrades, and
+  later requests pick them up — the service's ``stats()`` land in the
+  result JSON.  ``--tuning-workers 0`` defers jobs (drained at exit);
+  the provider only affects the ``pallas`` backend (``--backend``).
 """
 from __future__ import annotations
 
@@ -15,9 +26,26 @@ import numpy as np
 
 from repro.configs.base import get_arch, reduced
 from repro.core.database import ScheduleDB
-from repro.kernels.ops import ScheduleProvider
+from repro.kernels.ops import ScheduleProvider, set_default_provider, use_backend
 from repro.models.build import build_model
 from repro.serving import ServingEngine
+
+
+def make_provider(args) -> tuple[ScheduleProvider, object | None]:
+    """Build the schedule provider (and the service, when online) from args."""
+    service = None
+    schedule_map = {}
+    if args.tuning_db:
+        db = ScheduleDB.load(args.tuning_db)
+        schedule_map = {r.instance.workload_key(): r.schedule for r in db.records()}
+    if args.tuning_registry:
+        from repro.service import ScheduleRegistry, TuningService
+
+        registry = ScheduleRegistry(args.tuning_registry)
+        service = TuningService(registry, model_id=f"serve/{args.arch}",
+                                max_workers=args.tuning_workers,
+                                budget_s=args.tuning_budget_s)
+    return ScheduleProvider(schedule_map, service=service), service
 
 
 def main(argv=None) -> dict:
@@ -28,7 +56,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--backend", choices=["ref", "pallas"], default="ref")
     ap.add_argument("--tuning-db", default="")
+    ap.add_argument("--tuning-registry", default="",
+                    help="schedule-registry dir: serve through TuningService")
+    ap.add_argument("--tuning-workers", type=int, default=2)
+    ap.add_argument("--tuning-budget-s", type=float, default=float("inf"),
+                    help="virtual search seconds for background tuning jobs")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -37,9 +71,8 @@ def main(argv=None) -> dict:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    if args.tuning_db:
-        db = ScheduleDB.load(args.tuning_db)
-        ScheduleProvider({r.instance.workload_key(): r.schedule for r in db.records()})
+    provider, service = make_provider(args)
+    prev_provider = set_default_provider(provider)
 
     extras = {}
     if cfg.family == "audio":
@@ -53,21 +86,32 @@ def main(argv=None) -> dict:
     pending = [list(rng.integers(1, cfg.vocab_size, size=int(rng.integers(3, 9))))
                for _ in range(args.requests)]
     done, t0, steps = [], time.monotonic(), 0
-    while pending or engine.active:
-        while pending:
-            req = engine.add_request([int(t) for t in pending[0]],
-                                     max_new_tokens=args.new_tokens)
-            if req is None:
-                break
-            pending.pop(0)
-        done.extend(engine.step())
-        steps += 1
-        if steps > 10_000:
-            raise RuntimeError("serving did not converge")
+    try:
+        with use_backend(args.backend):
+            while pending or engine.active:
+                while pending:
+                    req = engine.add_request([int(t) for t in pending[0]],
+                                             max_new_tokens=args.new_tokens)
+                    if req is None:
+                        break
+                    pending.pop(0)
+                done.extend(engine.step())
+                steps += 1
+                if steps > 10_000:
+                    raise RuntimeError("serving did not converge")
+    finally:
+        set_default_provider(prev_provider)
+        if service is not None:
+            # Also on error paths: a live worker pool with queued jobs would
+            # otherwise keep the process alive after a serving failure.
+            service.close()
     dt = time.monotonic() - t0
     toks = sum(len(r.generated) for r in done)
     result = {"requests": len(done), "decode_steps": steps,
-              "tokens": toks, "tok_per_s": round(toks / dt, 1)}
+              "tokens": toks, "tok_per_s": round(toks / dt, 1),
+              "schedule_hits": provider.hits, "schedule_misses": provider.misses}
+    if service is not None:
+        result["tuning_service"] = service.stats()
     print(json.dumps(result))
     return result
 

@@ -1,0 +1,24 @@
+"""Online schedule-registry service.
+
+Serves tuned schedules behind the serving path and upgrades them with
+background transfer-tuning:
+
+    ScheduleRegistry ... segmented persistent store (registry.py)
+    TuningService ...... tiered lookup + background jobs (tuning_service.py)
+"""
+from repro.service.registry import (
+    RegistryError,
+    RegistryRecord,
+    RegistrySnapshot,
+    ScheduleRegistry,
+)
+from repro.service.tuning_service import LookupResult, TuningService
+
+__all__ = [
+    "LookupResult",
+    "RegistryError",
+    "RegistryRecord",
+    "RegistrySnapshot",
+    "ScheduleRegistry",
+    "TuningService",
+]

@@ -1,0 +1,302 @@
+"""Online tuning service: tiered schedule lookup + background transfer-tuning.
+
+The serving path asks one question — "what schedule should this kernel
+instance run with, *right now*?" — and must never block on search.
+:class:`TuningService` answers it with a tiered policy over a
+:class:`~repro.service.registry.ScheduleRegistry` snapshot:
+
+1. **exact** — a published record for this exact workload (Ansor's
+   workload-ID reuse; includes upgrades this service published earlier);
+2. **transfer** — the best same-class donor candidate, probed through the
+   injected :class:`~repro.core.runner.MeasureRunner` (bounded to
+   ``probe_candidates`` strongest donors; a shared :class:`CachedRunner`
+   makes repeat probes and the later background job free);
+3. **default** — the untuned schedule.
+
+Every non-exact lookup enqueues a **background transfer-tuning job** for the
+missed workload: deduplicated by workload key, run on a bounded worker pool,
+bounded by a total *virtual search seconds* budget, and published atomically
+to the registry — so subsequent lookups for that workload upgrade to tier 1.
+A published schedule is never downgraded: a job's result is only published
+when it beats the best record already visible for that workload.
+
+The background job is exactly the offline pipeline
+(:func:`repro.core.transfer.transfer_tune` over the full donor pool with the
+service's mode/seed), so a drained service converges to the same schedules an
+offline ``transfer_arch`` run would produce for the same workloads, donors,
+and budget — the online path trades *when* search happens, not *what* it
+finds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor, wait
+from typing import Sequence
+
+from repro.core.database import Record, ScheduleDB
+from repro.core.runner import MeasureRunner, default_runner
+from repro.core.schedule import Schedule, ScheduleInvalid
+from repro.core.transfer import _strongest_first, transfer_tune
+from repro.core.workload import KernelInstance, KernelUse
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupResult:
+    """Answer to one serving-path schedule query."""
+
+    schedule: Schedule | None    # None -> run the untuned default
+    tier: str                    # "exact" | "transfer" | "default"
+    seconds: float               # noise-free kernel seconds under the answer
+    untuned_seconds: float
+    source_model: str = ""       # provenance of the chosen schedule
+    generation: int = 0          # registry generation the answer was read at
+
+    @property
+    def speedup(self) -> float:
+        return self.untuned_seconds / self.seconds if self.seconds else 1.0
+
+
+@dataclasses.dataclass
+class _Job:
+    instance: KernelInstance
+    future: Future | None = None   # None -> deferred (drained inline)
+    started: bool = False
+
+
+class TuningService:
+    """Schedule lookups now, transfer-tuning upgrades in the background.
+
+    ``max_workers > 0`` runs jobs on a thread pool as they are enqueued;
+    ``max_workers = 0`` defers them until :meth:`drain` — deterministic, used
+    by tests and the benchmark's stepwise stream.  ``budget_s`` bounds the
+    total virtual search seconds background jobs may charge (probe-tier
+    measurement is accounted separately in ``probe_search_s``).  ``donors``
+    restricts the candidate pool to the given model ids; by default every
+    model in the registry except ``model_id`` (this service's own published
+    upgrades) is a donor, which keeps background jobs equivalent to an
+    offline run against the donor-only store.
+    """
+
+    def __init__(self, registry, *, model_id: str = "serving",
+                 runner: MeasureRunner | None = None, mode: str = "strict",
+                 seed: int = 0, noise_sigma: float = 0.05,
+                 donors: Sequence[str] | None = None,
+                 budget_s: float = float("inf"), max_workers: int = 2,
+                 probe_candidates: int | None = 4):
+        self.registry = registry
+        self.model_id = model_id
+        self.runner = runner if runner is not None else default_runner()
+        self.mode = mode
+        self.seed = seed
+        self.noise_sigma = noise_sigma
+        self.donors = list(donors) if donors is not None else None
+        self.budget_s = budget_s
+        self.probe_candidates = probe_candidates
+        self._pool = ThreadPoolExecutor(max_workers) if max_workers > 0 else None
+        self._lock = threading.Lock()
+        # Separate from _lock: serializes the check-then-publish pair without
+        # making lookups' counter bumps wait on registry fsyncs.
+        self._publish_lock = threading.Lock()
+        self._jobs: dict[str, _Job] = {}
+        self._attempted: set[str] = set()
+        self._spent_s = 0.0
+        self._probe_s = 0.0
+        self._counters = {
+            "lookups": 0, "exact_hits": 0, "transfer_hits": 0,
+            "default_misses": 0, "jobs_enqueued": 0, "jobs_deduped": 0,
+            "jobs_rejected_budget": 0, "jobs_completed": 0, "jobs_failed": 0,
+            "upgrades": 0, "publish_skipped": 0,
+        }
+
+    # -- lookup ---------------------------------------------------------------
+    def _donor_models(self, db: ScheduleDB) -> list[str]:
+        if self.donors is not None:
+            return list(self.donors)
+        return [m for m in db.models() if m != self.model_id]
+
+    def lookup(self, instance: KernelInstance) -> LookupResult:
+        snap = self.registry.snapshot()
+        # Pool over every mode: a record's mode tag certifies validity under
+        # that mode, but candidates are re-validated here under self.mode (the
+        # exact tier's seconds query and the probe measurements both raise /
+        # invalidate on a bad bind), so cross-mode reuse is safe.
+        db = snap.db(None)
+        untuned = self.runner.seconds(instance, None)
+        with self._lock:
+            self._counters["lookups"] += 1
+
+        # Best exact record overall, falling back to the best record published
+        # under this service's own mode when the overall winner doesn't bind
+        # (e.g. a faster adaptive-mode record shadowing a valid strict one).
+        for exact in (db.exact(instance), snap.db(self.mode).exact(instance)):
+            if exact is None:
+                continue
+            try:
+                secs = self.runner.seconds(instance, exact.schedule, mode=self.mode)
+            except ScheduleInvalid:
+                continue
+            with self._lock:
+                self._counters["exact_hits"] += 1
+            return LookupResult(exact.schedule, "exact", secs, untuned,
+                                exact.model_id, snap.generation)
+
+        # Miss: queue the upgrade first so serving latency never gates search.
+        self._enqueue(instance)
+
+        # Tier 2: probe the strongest same-class donor candidates.
+        # probe_candidates: 0 disables the tier (pure background-upgrade
+        # serving), None probes the full pool, N > 0 caps serve-path probing.
+        candidates: list[Record] = []
+        if self.probe_candidates != 0:
+            candidates = db.by_class(instance.class_id,
+                                     models=self._donor_models(db))
+            if (self.probe_candidates is not None
+                    and len(candidates) > self.probe_candidates):
+                # Same ranking the offline transfer path truncates with.
+                candidates = _strongest_first(candidates, self.probe_candidates,
+                                              self.runner)
+        if candidates:
+            measured = self.runner.measure_many(
+                instance, [r.schedule for r in candidates], mode=self.mode,
+                seed=self.seed, noise_sigma=self.noise_sigma)
+            best_secs, best = untuned, None
+            probe_cost = 0.0
+            for rec, m in zip(candidates, measured):
+                probe_cost += m.measure_cost_s
+                if m.valid and not m.pruned and m.seconds < best_secs:
+                    best_secs, best = m.seconds, rec
+            with self._lock:
+                self._probe_s += probe_cost
+            if best is not None:
+                secs = self.runner.seconds(instance, best.schedule, mode=self.mode)
+                with self._lock:
+                    self._counters["transfer_hits"] += 1
+                return LookupResult(best.schedule, "transfer", secs, untuned,
+                                    best.model_id, snap.generation)
+
+        with self._lock:
+            self._counters["default_misses"] += 1
+        return LookupResult(None, "default", untuned, untuned, "", snap.generation)
+
+    # -- background jobs ------------------------------------------------------
+    def _enqueue(self, instance: KernelInstance) -> None:
+        key = instance.workload_key()
+        with self._lock:
+            if key in self._jobs or key in self._attempted:
+                self._counters["jobs_deduped"] += 1
+                return
+            if self._spent_s >= self.budget_s:
+                self._counters["jobs_rejected_budget"] += 1
+                return
+            job = _Job(instance)
+            self._jobs[key] = job
+            self._counters["jobs_enqueued"] += 1
+            if self._pool is not None:
+                job.future = self._pool.submit(self._run_job, key)
+
+    def _run_job(self, key: str) -> bool:
+        """Transfer-tune one missed workload and publish an upgrade.
+
+        Returns True when a better schedule was published."""
+        with self._lock:
+            job = self._jobs.get(key)
+            if job is None or job.started:
+                return False
+            # Re-check the budget at run time: jobs admitted while earlier
+            # ones were still queued must not run once the budget is spent.
+            if self._spent_s >= self.budget_s:
+                self._counters["jobs_rejected_budget"] += 1
+                self._jobs.pop(key, None)
+                return False
+            job.started = True
+        instance = job.instance
+        try:
+            snap = self.registry.snapshot()
+            db = snap.db(None)
+            res = transfer_tune(
+                [KernelUse(instance)], db, model_id=self.model_id,
+                donors=self._donor_models(db), mode=self.mode, seed=self.seed,
+                noise_sigma=self.noise_sigma, runner=self.runner)
+            with self._lock:
+                self._spent_s += res.search_time_s
+            k = res.kernels[0]
+            published = False
+            if k.chosen is not None:
+                published = self._publish(instance, k.chosen, k.seconds,
+                                          k.chosen_from)
+            with self._lock:
+                self._counters["jobs_completed"] += 1
+            return published
+        except Exception:
+            with self._lock:
+                self._counters["jobs_failed"] += 1
+            raise
+        finally:
+            with self._lock:
+                self._attempted.add(key)
+                self._jobs.pop(key, None)
+
+    def _publish(self, instance: KernelInstance, schedule: Schedule,
+                 seconds: float, donor: str) -> bool:
+        """Publish atomically unless it would downgrade the visible best."""
+        with self._publish_lock:
+            current = self.registry.snapshot().db(None).exact(instance)
+            if current is not None and current.seconds <= seconds:
+                with self._lock:
+                    self._counters["publish_skipped"] += 1
+                return False
+            self.registry.publish(
+                [Record(instance=instance, schedule=schedule, seconds=seconds,
+                        model_id=self.model_id)],
+                mode=self.mode)
+            with self._lock:
+                self._counters["upgrades"] += 1
+            return True
+
+    def drain(self, max_jobs: int | None = None, timeout: float | None = None) -> int:
+        """Complete queued background work; returns jobs finished.
+
+        Deferred mode (``max_workers=0``) runs up to ``max_jobs`` queued jobs
+        inline, oldest first — the deterministic stepping used by the
+        benchmark's serve stream.  Threaded mode waits for in-flight futures.
+        """
+        finished = 0
+        if self._pool is None:
+            while True:
+                with self._lock:
+                    pending = [k for k, j in self._jobs.items()
+                               if j.future is None and not j.started]
+                if not pending or (max_jobs is not None and finished >= max_jobs):
+                    return finished
+                self._run_job(pending[0])
+                finished += 1
+        while True:
+            with self._lock:
+                futures = [j.future for j in self._jobs.values()
+                           if j.future is not None]
+            if not futures:
+                return finished
+            done, _ = wait(futures, timeout=timeout)
+            finished += len(done)
+            if timeout is not None:
+                return finished
+
+    def close(self) -> None:
+        """Drain outstanding work (including deferred jobs) and shut down."""
+        self.drain()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    # -- telemetry ------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            out = dict(self._counters)
+            out["in_flight"] = len(self._jobs)
+            out["search_seconds_spent"] = self._spent_s
+            out["probe_search_s"] = self._probe_s
+            out["budget_s"] = self.budget_s
+        out["generation"] = self.registry.generation
+        lookups = out["lookups"] or 1
+        out["exact_hit_rate"] = out["exact_hits"] / lookups
+        return out

@@ -1,7 +1,10 @@
 """Schedule database semantics + persistence."""
+import json
 import os
 
-from repro.core.database import Record, ScheduleDB
+import pytest
+
+from repro.core.database import Record, ScheduleDB, UnknownSchemaVersion
 from repro.core.schedule import Schedule, default_schedule
 from repro.core.workload import KernelInstance
 
@@ -54,3 +57,19 @@ def test_persistence_roundtrip(tmp_path):
 
 def test_load_or_empty(tmp_path):
     assert len(ScheduleDB.load_or_empty(os.path.join(tmp_path, "nope.json"))) == 0
+
+
+def test_load_rejects_unknown_version(tmp_path):
+    path = os.path.join(tmp_path, "db.json")
+    with open(path, "w") as f:
+        json.dump({"version": 99, "records": []}, f)
+    with pytest.raises(UnknownSchemaVersion, match="version 99"):
+        ScheduleDB.load(path)
+
+
+def test_load_rejects_missing_version(tmp_path):
+    path = os.path.join(tmp_path, "db.json")
+    with open(path, "w") as f:
+        json.dump({"records": []}, f)
+    with pytest.raises(UnknownSchemaVersion):
+        ScheduleDB.load(path)

@@ -1,0 +1,189 @@
+"""Segmented schedule registry: durability, atomicity, compaction, versioning."""
+import json
+import os
+
+import pytest
+
+from repro.core.autoscheduler import tune_kernel
+from repro.core.database import Record, SCHEMA_VERSION, ScheduleDB, UnknownSchemaVersion
+from repro.core.schedule import default_schedule
+from repro.core.workload import KernelInstance
+from repro.service import RegistryError, ScheduleRegistry
+from repro.service.registry import MANIFEST_NAME, SEGMENT_DIR
+
+
+def g(m, n=None, k=None):
+    return KernelInstance.make("matmul", M=m, N=n or m, K=k or m)
+
+
+def rec(inst, secs, model="m"):
+    return Record(inst, default_schedule(inst), secs, model)
+
+
+@pytest.fixture
+def root(tmp_path):
+    return str(tmp_path / "registry")
+
+
+def segment_files(root):
+    return sorted(os.listdir(os.path.join(root, SEGMENT_DIR)))
+
+
+def test_publish_reopen_roundtrip(root):
+    reg = ScheduleRegistry(root)
+    assert reg.generation == 0
+    g1 = reg.publish([rec(g(512), 2.0), rec(g(256), 1.0)])
+    g2 = reg.publish([rec(g(512), 1.5, "other")])
+    assert (g1, g2) == (1, 2)
+
+    reopened = ScheduleRegistry(root)
+    assert reopened.generation == 2
+    db = reopened.snapshot().db()
+    assert len(db) == 3
+    assert db.exact(g(512)).seconds == 1.5
+
+
+def test_snapshot_is_immutable_and_lock_free(root):
+    reg = ScheduleRegistry(root)
+    reg.publish([rec(g(512), 2.0)])
+    snap = reg.snapshot()
+    reg.publish([rec(g(512), 1.0)])
+    # the held snapshot still sees the old world; the fresh one the new
+    assert snap.db().exact(g(512)).seconds == 2.0
+    assert reg.snapshot().db().exact(g(512)).seconds == 1.0
+    assert reg.snapshot().generation == snap.generation + 1
+
+
+def test_each_publish_is_one_segment(root):
+    reg = ScheduleRegistry(root)
+    reg.publish([rec(g(512), 2.0), rec(g(256), 1.0)])
+    reg.publish([rec(g(128), 1.0)])
+    assert len(segment_files(root)) == 2
+
+
+def test_partial_trailing_write_recovers(root):
+    reg = ScheduleRegistry(root)
+    reg.publish([rec(g(512), 2.0), rec(g(256), 1.0)])
+    [seg] = segment_files(root)
+    path = os.path.join(root, SEGMENT_DIR, seg)
+    # crash mid-append: chop the file inside the last record's JSON
+    data = open(path).read().rstrip("\n")
+    with open(path, "w") as f:
+        f.write(data[: len(data) - 25])
+
+    reopened = ScheduleRegistry(root)
+    db = reopened.snapshot().db()
+    assert len(db) == 1                      # complete prefix survives
+    assert db.exact(g(512)).seconds == 2.0   # first record intact
+    assert reopened.recovered_partial_lines == 1
+
+
+def test_mid_segment_corruption_is_an_error(root):
+    reg = ScheduleRegistry(root)
+    reg.publish([rec(g(512), 2.0), rec(g(256), 1.0)])
+    [seg] = segment_files(root)
+    path = os.path.join(root, SEGMENT_DIR, seg)
+    lines = open(path).read().rstrip("\n").split("\n")
+    lines[1] = lines[1][:-20]                # corrupt a NON-tail record
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(RegistryError):
+        ScheduleRegistry(root)
+
+
+def test_unreferenced_partial_segment_is_ignored(root):
+    """A crash between segment write and manifest swap leaves an orphan file
+    the manifest never references — reopen must not read it."""
+    reg = ScheduleRegistry(root)
+    reg.publish([rec(g(512), 2.0)])
+    with open(os.path.join(root, SEGMENT_DIR, "seg-999999.jsonl"), "w") as f:
+        f.write('{"version": 1, "kind": "segm')   # torn header
+    reopened = ScheduleRegistry(root)
+    assert len(reopened.snapshot()) == 1
+
+
+def test_compaction_keeps_best_per_instance_and_mode(root):
+    reg = ScheduleRegistry(root)
+    reg.publish([rec(g(512), 2.0, "a"), rec(g(256), 1.0, "a")])
+    reg.publish([rec(g(512), 1.5, "b")])
+    reg.publish([rec(g(512), 3.0, "c")], mode="adaptive")
+    gen_before = reg.generation
+
+    gen = reg.compact()
+    assert gen == gen_before + 1
+    assert len(segment_files(root)) == 1     # old segments deleted
+    snap = reg.snapshot()
+    assert len(snap) == 3                    # (512,strict) (256,strict) (512,adaptive)
+    assert snap.db("strict").exact(g(512)).seconds == 1.5
+    assert snap.db("adaptive").exact(g(512)).seconds == 3.0
+    # reopen agrees with the in-process view
+    assert len(ScheduleRegistry(root).snapshot()) == 3
+
+
+def test_merge_concurrent_schedule_dbs(root):
+    db_a = ScheduleDB([rec(g(512), 2.0, "a")])
+    db_b = ScheduleDB([rec(g(512), 1.0, "b"), rec(g(256), 1.0, "b")])
+    reg = ScheduleRegistry(root)
+    reg.merge_db(db_a)
+    reg.merge_db(db_b)
+    assert reg.generation == 2
+    merged = reg.snapshot().db()
+    assert len(merged) == 3
+    assert merged.exact(g(512)).model_id == "b"
+
+
+def test_publish_absorbs_other_writers_segments(root):
+    """Publishing over a stale in-memory snapshot must pick up segments other
+    processes landed in between — not bury them under a matching generation."""
+    a = ScheduleRegistry(root)
+    b = ScheduleRegistry(root)
+    b.publish([rec(g(512), 2.0, "b")])
+    a.publish([rec(g(256), 1.0, "a")])     # a's snapshot was stale
+    db = a.snapshot().db()
+    assert len(db) == 2
+    assert db.exact(g(512)) is not None    # b's record is visible
+    assert a.generation == 2
+    assert len(b.refresh()) == 2
+
+
+def test_refresh_sees_other_writers(root):
+    reader = ScheduleRegistry(root)
+    writer = ScheduleRegistry(root)          # second handle = other process
+    writer.publish([rec(g(512), 2.0)])
+    assert len(reader.snapshot()) == 0       # stale until refreshed
+    reader.refresh()
+    assert len(reader.snapshot()) == 1
+    assert reader.generation == 1
+
+
+def test_manifest_version_is_validated(root):
+    ScheduleRegistry(root)
+    mpath = os.path.join(root, MANIFEST_NAME)
+    manifest = json.load(open(mpath))
+    manifest["version"] = 99
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(UnknownSchemaVersion):
+        ScheduleRegistry(root)
+
+
+def test_segment_version_is_validated(root):
+    reg = ScheduleRegistry(root)
+    reg.publish([rec(g(512), 2.0)])
+    [seg] = segment_files(root)
+    path = os.path.join(root, SEGMENT_DIR, seg)
+    lines = open(path).read().rstrip("\n").split("\n")
+    lines[0] = json.dumps({"version": SCHEMA_VERSION + 1, "kind": "segment"})
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(UnknownSchemaVersion):
+        ScheduleRegistry(root)
+
+
+def test_registry_roundtrips_tuned_schedules(root):
+    inst = g(512)
+    res = tune_kernel(inst, trials=64)
+    reg = ScheduleRegistry(root)
+    reg.publish([Record(inst, res.best, res.best_seconds, "donor")])
+    back = ScheduleRegistry(root).snapshot().db().exact(inst)
+    assert back.schedule == res.best and back.seconds == res.best_seconds
