@@ -24,6 +24,7 @@ def main() -> None:
         bench_runner_cache,
         bench_seqlen,
         bench_service,
+        bench_targets,
     )
 
     suites = [
@@ -38,6 +39,7 @@ def main() -> None:
         ("Roofline (dry-run artifacts)", bench_roofline),
         ("MeasureRunner cached/pruned backends", bench_runner_cache),
         ("Schedule-registry service cold-start stream", bench_service),
+        ("§5.3 server-vs-edge multi-target", bench_targets),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

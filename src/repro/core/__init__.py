@@ -6,10 +6,11 @@ Public API:
     measure / evaluate / model_seconds (v5e cost model) .... cost_model.py
     MeasureRunner / Analytical|Cached|PruningRunner ........ runner.py
     tune_kernel / tune_model (Ansor analogue) .............. autoscheduler.py
-    ScheduleDB / Record .................................... database.py
-    transfer_tune / transfer_matrix ........................ transfer.py
+    ScheduleDB / Record (target-namespaced) ................ database.py
+    transfer_tune / transfer_matrix / cross_target_transfer  transfer.py
     select_donor / top_donors (Eq. 1) ...................... heuristic.py
     extract_kernels (model config -> kernel workloads) ..... extract.py
+    Target / get_target / resolve_target ................... repro.targets
 """
 from repro.core.autoscheduler import ModelTuneResult, TuneResult, tune_kernel, tune_model, tune_model_into_db
 from repro.core.cost_model import (
@@ -32,16 +33,25 @@ from repro.core.runner import (
     default_runner,
 )
 from repro.core.schedule import ConcreteSchedule, Schedule, ScheduleInvalid, concretize, default_schedule
-from repro.core.transfer import KernelTransfer, TransferResult, transfer_matrix, transfer_tune
+from repro.core.transfer import (
+    KernelTransfer,
+    TransferResult,
+    cross_target_transfer,
+    transfer_matrix,
+    transfer_tune,
+)
 from repro.core.workload import KERNEL_CLASSES, KernelInstance, KernelUse, classes_in, dedup_uses
+from repro.targets import DEFAULT_TARGET, Target, get_target, list_targets, resolve_target
 
 __all__ = [
+    "DEFAULT_TARGET",
     "KERNEL_CLASSES",
     "AnalyticalRunner",
     "CachedRunner",
     "ConcreteSchedule",
     "CostBreakdown",
     "DonorScore",
+    "Target",
     "MeasureRunner",
     "PruningRunner",
     "RunnerStats",
@@ -59,15 +69,19 @@ __all__ = [
     "class_proportions",
     "classes_in",
     "concretize",
+    "cross_target_transfer",
     "dedup_uses",
     "default_runner",
     "default_schedule",
     "donor_scores",
     "evaluate",
     "extract_kernels",
+    "get_target",
     "kernel_seconds",
+    "list_targets",
     "measure",
     "model_seconds",
+    "resolve_target",
     "select_donor",
     "top_donors",
     "transfer_matrix",

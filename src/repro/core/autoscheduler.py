@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.core.cost_model import Measurement
 from repro.core.database import Record, ScheduleDB
-from repro.core.runner import MeasureRunner, default_runner, telemetry_delta
+from repro.core.runner import MeasureRunner, resolve_runner, telemetry_delta
+from repro.targets import DEFAULT_TARGET
 from repro.core.schedule import (
     UNROLL_CHOICES,
     VEC_CHOICES,
@@ -192,6 +193,7 @@ class TuneResult:
     trace: list[TracePoint]
     wall_time_s: float
     runner_telemetry: dict = dataclasses.field(default_factory=dict)
+    target: str = DEFAULT_TARGET   # chip the search measured on
 
 
 class KernelTask:
@@ -199,12 +201,13 @@ class KernelTask:
 
     Measurement goes through the injected ``runner`` (one may be shared
     across tasks to pool caching); the default is a fresh memoizing
-    analytical runner.
+    analytical runner for ``target`` (the two must agree when both given —
+    the task's records belong in that target's namespace).
     """
 
     def __init__(self, instance: KernelInstance, seed: int, noise_sigma: float = 0.05,
                  population: int = 32, measure_per_round: int = 8,
-                 runner: MeasureRunner | None = None):
+                 runner: MeasureRunner | None = None, target=None):
         self.instance = instance
         # int(hex_key) not hash(): str hash is salted per process and would
         # make tuning results non-reproducible across runs.
@@ -212,7 +215,7 @@ class KernelTask:
         self.noise_sigma = noise_sigma
         self.population = population
         self.measure_per_round = measure_per_round
-        self.runner = runner if runner is not None else default_runner()
+        self.runner, self.target = resolve_runner(runner, target)
         self.surrogate = Surrogate()
         self.seed = seed
         self.pool: list[tuple[Schedule, float]] = []  # measured (schedule, noisy seconds)
@@ -273,9 +276,9 @@ class KernelTask:
 
 def tune_kernel(instance: KernelInstance, trials: int = 128, seed: int = 0,
                 noise_sigma: float = 0.05,
-                runner: MeasureRunner | None = None) -> TuneResult:
+                runner: MeasureRunner | None = None, target=None) -> TuneResult:
     t0 = time.monotonic()
-    runner = runner if runner is not None else default_runner()
+    runner, tname = resolve_runner(runner, target)
     before = runner.telemetry()
     task = KernelTask(instance, seed=seed, noise_sigma=noise_sigma, runner=runner)
     trace: list[TracePoint] = []
@@ -287,6 +290,7 @@ def tune_kernel(instance: KernelInstance, trials: int = 128, seed: int = 0,
         best=task.best_schedule, best_seconds=task.best_seconds, trials=task.trials,
         search_time_s=task.search_time_s, trace=trace, wall_time_s=time.monotonic() - t0,
         runner_telemetry=telemetry_delta(runner.telemetry(), before),
+        target=tname,
     )
 
 
@@ -306,6 +310,7 @@ class ModelTuneResult:
     tuned_seconds: float
     trace: list[TracePoint]   # (search time, best *model* seconds)
     runner_telemetry: dict = dataclasses.field(default_factory=dict)
+    target: str = DEFAULT_TARGET   # chip the search measured on
 
     @property
     def speedup(self) -> float:
@@ -321,6 +326,7 @@ def tune_model(
     round_trials: int = 16,
     stop_when: Callable[[float, float], bool] | None = None,
     runner: MeasureRunner | None = None,
+    target=None,
 ) -> ModelTuneResult:
     """Tune every kernel of a model under a shared trial budget.
 
@@ -331,10 +337,11 @@ def tune_model(
     ``stop_when(search_time_s, model_seconds)`` allows the benchmarks to cut
     the search at a given virtual time or speedup (paper's same-time /
     time-to-match comparisons).  One ``runner`` is shared across all kernel
-    tasks, so a memoizing runner dedups measurements model-wide.
+    tasks, so a memoizing runner dedups measurements model-wide.  ``target``
+    selects the chip to tune for; the emitted records land in its namespace.
     """
     t0 = time.monotonic()
-    runner = runner if runner is not None else default_runner()
+    runner, tname = resolve_runner(runner, target)
     tele_before = runner.telemetry()
     tasks = [KernelTask(u.instance, seed=seed, noise_sigma=noise_sigma, runner=runner)
              for u in uses]
@@ -378,13 +385,13 @@ def tune_model(
                 continue
             seen.add(key)
             records.append(Record(instance=t.instance, schedule=sched, seconds=secs,
-                                  model_id=model_id, trials=t.trials))
+                                  model_id=model_id, trials=t.trials, target=tname))
             if len(seen) >= 5:
                 break
         if not seen:  # no valid measured schedule: record the default-based best
             records.append(Record(instance=t.instance, schedule=t.best_schedule,
                                   seconds=t.best_seconds, model_id=model_id,
-                                  trials=t.trials))
+                                  trials=t.trials, target=tname))
     return ModelTuneResult(
         model_id=model_id,
         records=records,
@@ -395,6 +402,7 @@ def tune_model(
         tuned_seconds=model_now(),
         trace=trace,
         runner_telemetry=telemetry_delta(runner.telemetry(), tele_before),
+        target=tname,
     )
 
 

@@ -18,6 +18,7 @@ from typing import Iterable, Mapping, Sequence
 
 from repro.core.schedule import Schedule
 from repro.core.workload import KernelInstance
+from repro.targets import DEFAULT_TARGET, target_name
 
 #: On-disk schema version shared by every schedule store (the monolithic
 #: ScheduleDB JSON payload and the registry's manifest / segment headers).
@@ -51,6 +52,7 @@ class Record:
     seconds: float           # measured (cost-model) seconds on the source instance
     model_id: str            # donor model the kernel belongs to
     trials: int = 0          # search trials spent producing this record
+    target: str = DEFAULT_TARGET  # hardware target the measurement ran on
 
     def to_json(self) -> dict:
         return {
@@ -59,6 +61,7 @@ class Record:
             "seconds": self.seconds,
             "model_id": self.model_id,
             "trials": self.trials,
+            "target": self.target,
         }
 
     @staticmethod
@@ -69,24 +72,38 @@ class Record:
             seconds=float(d["seconds"]),
             model_id=d["model_id"],
             trials=int(d.get("trials", 0)),
+            # Pre-target-subsystem stores only ever measured the seed chip,
+            # so a missing field is unambiguous (same schema version).
+            target=d.get("target", DEFAULT_TARGET),
         )
 
 
 class ScheduleDB:
     """In-memory schedule store with JSON persistence (atomic writes).
 
-    Holds up to MAX_PER_WORKLOAD distinct schedules per (workload, model) —
-    Ansor's tuning logs retain every measured schedule, and transfer-tuning
-    draws its candidate pool from them; keeping the top-k per donor kernel
-    preserves pool sizes comparable to the paper's many-kernels-per-class
-    CNNs even though LM stacks dedup to few unique workloads per class.
+    Holds up to MAX_PER_WORKLOAD distinct schedules per (target, workload,
+    model) — Ansor's tuning logs retain every measured schedule, and
+    transfer-tuning draws its candidate pool from them; keeping the top-k per
+    donor kernel preserves pool sizes comparable to the paper's
+    many-kernels-per-class CNNs even though LM stacks dedup to few unique
+    workloads per class.
+
+    Every record is **namespaced by hardware target**: queries take a
+    ``target`` (name / Target / None = the default ``tpu-v5e``) and only ever
+    return records measured on that chip, so a schedule tuned for one target
+    cannot silently serve another.  Cross-target reuse is explicit — pass the
+    donor chip's name as the query target (what
+    :func:`repro.core.transfer.cross_target_transfer` does) and re-measure
+    under the serving chip's spec.
     """
 
     MAX_PER_WORKLOAD = 5
 
     def __init__(self, records: Iterable[Record] = ()):
-        self._by_workload: dict[tuple[str, str], list[Record]] = {}
-        self._best: dict[str, Record] = {}   # workload -> best record (any model)
+        # (target, workload, model) -> top-k records, sorted by seconds
+        self._by_workload: dict[tuple[str, str, str], list[Record]] = {}
+        # (target, workload) -> best record (any model)
+        self._best: dict[tuple[str, str], Record] = {}
         self._frozen = False
         for r in records:
             self.add(r)
@@ -103,10 +120,10 @@ class ScheduleDB:
                 "ScheduleDB is frozen (a registry snapshot view is shared and "
                 "immutable) — copy it with ScheduleDB(db.records()) to mutate")
         wk = record.instance.workload_key()
-        cur = self._best.get(wk)
+        cur = self._best.get((record.target, wk))
         if cur is None or record.seconds < cur.seconds:
-            self._best[wk] = record
-        key = (wk, record.model_id)
+            self._best[(record.target, wk)] = record
+        key = (record.target, wk, record.model_id)
         bucket = self._by_workload.setdefault(key, [])
         for i, r in enumerate(bucket):
             if r.schedule == record.schedule:
@@ -120,9 +137,9 @@ class ScheduleDB:
 
     @property
     def _records(self) -> dict:
-        # flattened view keyed by (workload, model, rank)
+        # flattened view keyed by (target, workload, model, rank)
         return {
-            (k[0], k[1], i): r
+            (*k, i): r
             for k, rs in self._by_workload.items()
             for i, r in enumerate(rs)
         }
@@ -135,33 +152,48 @@ class ScheduleDB:
     def records(self) -> list[Record]:
         return [r for rs in self._by_workload.values() for r in rs]
 
-    def models(self) -> list[str]:
-        return sorted({m for (_w, m) in self._by_workload})
+    def models(self, target=None) -> list[str]:
+        """Donor model ids; ``target`` restricts to models with records for
+        that chip (``None`` lists models across every target)."""
+        if target is None:
+            return sorted({m for (_t, _w, m) in self._by_workload})
+        t = target_name(target)
+        return sorted({m for (rt, _w, m) in self._by_workload if rt == t})
 
-    def exact(self, instance: KernelInstance) -> Record | None:
-        """Best record for this exact workload (any model) — Ansor reuse.
+    def targets(self) -> list[str]:
+        """Every hardware target this DB holds records for."""
+        return sorted({t for (t, _w, _m) in self._by_workload})
 
-        O(1): the best-per-workload index is maintained by ``add`` (bucket
-        truncation only ever drops non-best records, so it stays exact),
-        keeping the serving path's per-kernel resolution constant-time.
+    def exact(self, instance: KernelInstance, target=None) -> Record | None:
+        """Best ``target`` record for this exact workload (any model) —
+        Ansor reuse, namespaced by chip.
+
+        O(1): the best-per-(target, workload) index is maintained by ``add``
+        (bucket truncation only ever drops non-best records, so it stays
+        exact), keeping the serving path's per-kernel resolution
+        constant-time.
         """
-        return self._best.get(instance.workload_key())
+        return self._best.get((target_name(target), instance.workload_key()))
 
-    def by_class(self, class_id: str, models: Sequence[str] | None = None) -> list[Record]:
-        """All schedules of a class — the transfer-tuning candidate pool."""
+    def by_class(self, class_id: str, models: Sequence[str] | None = None,
+                 target=None) -> list[Record]:
+        """All ``target`` schedules of a class — the transfer candidate pool."""
+        t = target_name(target)
         out = [
             r
             for r in self.records()
-            if r.instance.class_id == class_id and (models is None or r.model_id in models)
+            if r.instance.class_id == class_id and r.target == t
+            and (models is None or r.model_id in models)
         ]
         return sorted(out, key=lambda r: (r.model_id, r.seconds))
 
-    def class_counts(self, model_id: str) -> dict[str, int]:
-        """|W_Tc| per class for one donor (Eq. 1): distinct tuned *kernels*
-        per class, matching the paper's per-kernel counting."""
+    def class_counts(self, model_id: str, target=None) -> dict[str, int]:
+        """|W_Tc| per class for one donor on one target (Eq. 1): distinct
+        tuned *kernels* per class, matching the paper's per-kernel counting."""
+        t = target_name(target)
         counts: dict[str, int] = {}
-        for (_w, m), rs in self._by_workload.items():
-            if m == model_id and rs:
+        for (rt, _w, m), rs in self._by_workload.items():
+            if m == model_id and rt == t and rs:
                 c = rs[0].instance.class_id
                 counts[c] = counts.get(c, 0) + 1
         return counts

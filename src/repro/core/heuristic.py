@@ -19,6 +19,7 @@ from repro.core.cost_model import class_proportions
 from repro.core.database import ScheduleDB
 from repro.core.runner import MeasureRunner
 from repro.core.workload import KernelUse
+from repro.targets import target_name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,14 +43,23 @@ def donor_scores(
     exclude: Sequence[str] = (),
     proportions: Mapping[str, float] | None = None,
     runner: MeasureRunner | None = None,
+    donor_target=None,
 ) -> list[DonorScore]:
-    """Rank all donor models in the DB for this target (descending score)."""
+    """Rank all donor models in the DB for this target model (descending).
+
+    ``donor_target`` names the hardware namespace the candidate pool is
+    drawn from (default: the runner's target, i.e. same-target transfer);
+    |W_Tc| only counts schedules tuned on that chip.  P_c shares come from
+    the runner's own target — the model will *run* there.
+    """
     p = dict(proportions) if proportions is not None else _proportions(uses, runner)
+    dt = target_name(donor_target if donor_target is not None
+                     else (runner.target if runner is not None else None))
     scores: list[DonorScore] = []
-    for model_id in db.models():
+    for model_id in db.models(target=dt):
         if model_id in exclude:
             continue
-        counts = db.class_counts(model_id)
+        counts = db.class_counts(model_id, target=dt)
         contrib = []
         total = 0.0
         for c, pc in p.items():
@@ -65,8 +75,10 @@ def donor_scores(
 
 def select_donor(uses: Sequence[KernelUse], db: ScheduleDB,
                  exclude: Sequence[str] = (),
-                 runner: MeasureRunner | None = None) -> str | None:
-    ranked = donor_scores(uses, db, exclude=exclude, runner=runner)
+                 runner: MeasureRunner | None = None,
+                 donor_target=None) -> str | None:
+    ranked = donor_scores(uses, db, exclude=exclude, runner=runner,
+                          donor_target=donor_target)
     if not ranked or ranked[0].score <= 0.0:
         return None
     return ranked[0].model_id
@@ -74,9 +86,11 @@ def select_donor(uses: Sequence[KernelUse], db: ScheduleDB,
 
 def top_donors(uses: Sequence[KernelUse], db: ScheduleDB, k: int = 3,
                exclude: Sequence[str] = (),
-               runner: MeasureRunner | None = None) -> list[DonorScore]:
+               runner: MeasureRunner | None = None,
+               donor_target=None) -> list[DonorScore]:
     """Top-k choices (paper Table 3)."""
-    return donor_scores(uses, db, exclude=exclude, runner=runner)[:k]
+    return donor_scores(uses, db, exclude=exclude, runner=runner,
+                        donor_target=donor_target)[:k]
 
 
 # ---------------------------------------------------------------------------
@@ -96,26 +110,29 @@ def donor_scores_v2(
     exclude: Sequence[str] = (),
     proportions: Mapping[str, float] | None = None,
     runner: MeasureRunner | None = None,
+    donor_target=None,
 ) -> list[DonorScore]:
     from repro.core.schedule import is_valid
 
     p = dict(proportions) if proportions is not None else _proportions(uses, runner)
+    dt = target_name(donor_target if donor_target is not None
+                     else (runner.target if runner is not None else None))
     targets_by_class: dict[str, list] = {}
     for u in uses:
         targets_by_class.setdefault(u.instance.class_id, []).append(u.instance)
 
     scores: list[DonorScore] = []
-    for model_id in db.models():
+    for model_id in db.models(target=dt):
         if model_id in exclude:
             continue
-        counts = db.class_counts(model_id)
+        counts = db.class_counts(model_id, target=dt)
         contrib = []
         total = 0.0
         for c, pc in p.items():
             n = counts.get(c, 0)
             if n == 0:
                 continue
-            recs = db.by_class(c, [model_id])
+            recs = db.by_class(c, [model_id], target=dt)
             pairs = [(r, t) for r in recs for t in targets_by_class.get(c, [])]
             compat = (sum(is_valid(r.schedule, t) for r, t in pairs) / len(pairs)
                       if pairs else 0.0)
@@ -130,8 +147,10 @@ def donor_scores_v2(
 
 def select_donor_v2(uses: Sequence[KernelUse], db: ScheduleDB,
                     exclude: Sequence[str] = (),
-                    runner: MeasureRunner | None = None) -> str | None:
-    ranked = donor_scores_v2(uses, db, exclude=exclude, runner=runner)
+                    runner: MeasureRunner | None = None,
+                    donor_target=None) -> str | None:
+    ranked = donor_scores_v2(uses, db, exclude=exclude, runner=runner,
+                             donor_target=donor_target)
     if not ranked or ranked[0].score <= 0.0:
         return None
     return ranked[0].model_id

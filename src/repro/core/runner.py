@@ -37,7 +37,8 @@ from typing import Sequence
 from repro.core.cost_model import Measurement, kernel_seconds, measure
 from repro.core.schedule import Schedule, ScheduleInvalid
 from repro.core.workload import KernelInstance
-from repro.hw.specs import TPU_V5E, ChipSpec
+from repro.hw.specs import ChipSpec
+from repro.targets import DEFAULT_TARGET, Target, resolve_target
 
 
 @dataclasses.dataclass
@@ -63,6 +64,20 @@ class MeasureRunner:
 
     def __init__(self) -> None:
         self.stats = RunnerStats()
+
+    @property
+    def target(self) -> str:
+        """Name of the hardware target this runner measures for.
+
+        Wrapper layers inherit it from their inner runner; the innermost
+        backend (AnalyticalRunner, or a future real-hardware runner) owns it.
+        A runner measures exactly one target — per-target namespacing of
+        schedule stores relies on this identity.
+        """
+        inner = getattr(self, "inner", None)
+        if inner is not None:
+            return inner.target
+        return DEFAULT_TARGET
 
     # -- core protocol -------------------------------------------------------
     def measure(self, instance: KernelInstance, schedule: Schedule, *,
@@ -120,11 +135,22 @@ def telemetry_delta(after: dict[str, float], before: dict[str, float]) -> dict[s
 
 
 class AnalyticalRunner(MeasureRunner):
-    """Bare analytical cost model — behaviour-identical to direct measure()."""
+    """Bare analytical cost model — behaviour-identical to direct measure().
 
-    def __init__(self, spec: ChipSpec = TPU_V5E):
+    ``target`` names the chip to model: a registered target name, a
+    :class:`~repro.targets.Target`, a bare :class:`ChipSpec`, or ``None``
+    (the default ``tpu-v5e``).
+    """
+
+    def __init__(self, target: "str | Target | ChipSpec | None" = None):
         super().__init__()
-        self.spec = spec
+        t = resolve_target(target)
+        self.spec = t.spec
+        self._target_name = t.name
+
+    @property
+    def target(self) -> str:
+        return self._target_name
 
     def measure(self, instance: KernelInstance, schedule: Schedule, *,
                 mode: str = "strict", seed: int = 0,
@@ -157,10 +183,13 @@ class CachedRunner(MeasureRunner):
         self._cache: dict[tuple, Measurement] = {}
         self._seconds_cache: dict[tuple, float | ScheduleInvalid] = {}
 
-    @staticmethod
-    def _key(instance: KernelInstance, schedule: Schedule, mode: str,
+    def _key(self, instance: KernelInstance, schedule: Schedule, mode: str,
              seed: int, noise_sigma: float) -> tuple:
-        return (instance.workload_key(), repr(schedule.to_json()), mode, seed, noise_sigma)
+        # The target is part of the key: the cached answer is a property of
+        # the chip the inner runner models, and keeping it explicit means a
+        # future cross-runner cache merge cannot alias across targets.
+        return (self.target, instance.workload_key(), repr(schedule.to_json()),
+                mode, seed, noise_sigma)
 
     def measure(self, instance: KernelInstance, schedule: Schedule, *,
                 mode: str = "strict", seed: int = 0,
@@ -180,7 +209,7 @@ class CachedRunner(MeasureRunner):
     def seconds(self, instance: KernelInstance, schedule: Schedule | None = None,
                 mode: str = "strict") -> float:
         skey = repr(schedule.to_json()) if schedule is not None else None
-        key = (instance.workload_key(), skey, mode)
+        key = (self.target, instance.workload_key(), skey, mode)
         if key in self._seconds_cache:
             val = self._seconds_cache[key]
             if isinstance(val, ScheduleInvalid):
@@ -270,6 +299,29 @@ class PruningRunner(MeasureRunner):
         return self.inner.seconds(instance, schedule, mode=mode)
 
 
-def default_runner() -> MeasureRunner:
-    """The stack-wide default: memoized analytical measurement."""
-    return CachedRunner(AnalyticalRunner())
+def default_runner(target: "str | Target | ChipSpec | None" = None) -> MeasureRunner:
+    """The stack-wide default: memoized analytical measurement of ``target``."""
+    return CachedRunner(AnalyticalRunner(target))
+
+
+def resolve_runner(runner: MeasureRunner | None,
+                   target: "str | Target | ChipSpec | None" = None,
+                   ) -> tuple[MeasureRunner, str]:
+    """Resolve the (runner, target-name) pair every tuning entrypoint needs.
+
+    * runner=None            → a fresh :func:`default_runner` for ``target``;
+    * runner given, target=None → the runner's own target;
+    * both given             → they must agree; a mismatch raises rather than
+      silently measuring one chip while labelling records with another.
+    """
+    if runner is None:
+        runner = default_runner(target)
+        return runner, runner.target
+    if target is not None:
+        name = resolve_target(target).name
+        if name != runner.target:
+            raise ValueError(
+                f"runner measures target {runner.target!r} but target={name!r} "
+                "was requested — build the runner with default_runner(target)")
+        return runner, name
+    return runner, runner.target

@@ -27,9 +27,10 @@ import time
 from typing import Sequence
 
 from repro.core.database import Record, ScheduleDB
-from repro.core.runner import MeasureRunner, default_runner, telemetry_delta
+from repro.core.runner import MeasureRunner, resolve_runner, telemetry_delta
 from repro.core.schedule import Schedule
 from repro.core.workload import KernelInstance, KernelUse
+from repro.targets import DEFAULT_TARGET, target_name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,10 +67,19 @@ class TransferResult:
     cache_misses: int = 0
     pruned_candidates: int = 0
     runner_telemetry: dict = dataclasses.field(default_factory=dict)
+    target: str = DEFAULT_TARGET     # chip the transfers were measured on
+    donor_target: str = DEFAULT_TARGET  # chip the donor pool was tuned on
 
     @property
     def speedup(self) -> float:
         return self.untuned_seconds / self.tuned_seconds
+
+    @property
+    def invalid_transfers(self) -> int:
+        """Candidates rejected as invalid across all kernels (Fig. 4 −1 bars;
+        for cross-target runs these include donors infeasible on ``target``,
+        e.g. server tiles overflowing the edge chip's VMEM)."""
+        return sum(k.invalid for k in self.kernels)
 
     def schedule_map(self) -> dict[str, Schedule]:
         """workload_key -> chosen schedule (for model execution / launch)."""
@@ -114,22 +124,35 @@ def transfer_tune(
     noise_sigma: float = 0.05,
     max_candidates_per_kernel: int | None = None,
     runner: MeasureRunner | None = None,
+    target=None,
+    donor_target=None,
 ) -> TransferResult:
     """Transfer-tune a target model from donor schedules in ``db``.
 
     ``donors=None`` uses the full pool (paper §5.5 "mixed"); a single-element
     list is the paper's default one-to-one setting.  ``runner`` injects the
     measurement backend; the default is a fresh memoizing analytical runner.
+
+    ``target`` names the chip transfers are measured and served on (it must
+    match ``runner``'s target when both are given).  ``donor_target`` names
+    the chip the donor pool was tuned on — it defaults to ``target``, and
+    setting it to a different chip is cross-target transfer
+    (:func:`cross_target_transfer`): donors are re-validated under
+    ``target``'s spec, and infeasible ones count as invalid transfers.  Exact
+    workload reuse only ever draws from ``target``'s own namespace — a
+    same-shape record from another chip is a candidate to re-measure, not a
+    zero-cost hit.
     """
     t0 = time.monotonic()
-    runner = runner if runner is not None else default_runner()
+    runner, tname = resolve_runner(runner, target)
+    donor_tname = target_name(donor_target) if donor_target is not None else tname
     before = runner.telemetry()
     kernels: list[KernelTransfer] = []
     search_time = 0.0
     for u in uses:
         inst = u.instance
         untuned = runner.seconds(inst, None)
-        exact = db.exact(inst)
+        exact = db.exact(inst, target=tname) if donor_tname == tname else None
         if exact is not None and (donors is None or exact.model_id in donors):
             # Ansor workload-ID reuse: no measurement needed — the noise-free
             # seconds query charges nothing and counts as zero measurements.
@@ -140,7 +163,7 @@ def transfer_tune(
                 candidates=0, invalid=0, exact_hit=True,
             ))
             continue
-        candidates = db.by_class(inst.class_id, models=donors)
+        candidates = db.by_class(inst.class_id, models=donors, target=donor_tname)
         if max_candidates_per_kernel is not None:
             candidates = _strongest_first(candidates, max_candidates_per_kernel, runner)
         measured = runner.measure_many(
@@ -183,7 +206,41 @@ def transfer_tune(
         cache_misses=int(delta.get("cache_misses", 0)),
         pruned_candidates=int(delta.get("pruned", 0)),
         runner_telemetry=delta,
+        target=tname,
+        donor_target=donor_tname,
     )
+
+
+def cross_target_transfer(
+    uses: Sequence[KernelUse],
+    db: ScheduleDB,
+    *,
+    source_target,
+    target,
+    runner: MeasureRunner | None = None,
+    **kw,
+) -> TransferResult:
+    """Explicit cross-target transfer: schedules auto-tuned on
+    ``source_target`` become the donor pool for ``target``.
+
+    This is the only sanctioned way a schedule crosses a target namespace
+    (Chen et al. 2018 argue schedule knowledge transfers across devices; the
+    namespaced stores make the trade-off measurable instead of accidental).
+    Every donor is re-validated and re-measured under ``target``'s spec:
+    tiles that overflow the destination chip's VMEM or break its geometry
+    surface as invalid transfers (the paper's −1 bars) rather than crashing,
+    and survivors are ranked by their measured seconds *on the destination
+    chip*.  The result's records belong in ``target``'s namespace.
+
+    Accepts every :func:`transfer_tune` keyword except ``donor_target``
+    (which is ``source_target`` by definition).
+    """
+    if target_name(source_target) == target_name(target):
+        raise ValueError(
+            f"source and destination target are both {target_name(target)!r} — "
+            "use transfer_tune for same-target reuse")
+    return transfer_tune(uses, db, runner=runner, target=target,
+                         donor_target=source_target, **kw)
 
 
 def transfer_matrix(
@@ -193,6 +250,8 @@ def transfer_matrix(
     mode: str = "strict",
     seed: int = 0,
     runner: MeasureRunner | None = None,
+    target=None,
+    donor_target=None,
 ) -> dict[str, dict[str, float | None]]:
     """Paper Fig. 4: per-(target kernel × donor schedule) standalone seconds.
 
@@ -203,11 +262,12 @@ def transfer_matrix(
     subsequent :func:`transfer_tune` call makes the tune pass free — every
     cell is already cached.
     """
-    runner = runner if runner is not None else default_runner()
+    runner, tname = resolve_runner(runner, target)
+    donor_tname = target_name(donor_target) if donor_target is not None else tname
     out: dict[str, dict[str, float | None]] = {}
     for u in uses:
         row: dict[str, float | None] = {}
-        recs = db.by_class(u.instance.class_id, models=donors)
+        recs = db.by_class(u.instance.class_id, models=donors, target=donor_tname)
         measured = runner.measure_many(
             u.instance, [rec.schedule for rec in recs], mode=mode, seed=seed)
         for rec, m in zip(recs, measured):

@@ -17,9 +17,10 @@ from repro.core.autoscheduler import ModelTuneResult, tune_model
 from repro.core.database import Record, ScheduleDB
 from repro.core.extract import extract_kernels
 from repro.core.heuristic import select_donor, select_donor_v2, top_donors
-from repro.core.runner import MeasureRunner, default_runner
+from repro.core.runner import MeasureRunner, resolve_runner
 from repro.core.transfer import TransferResult, transfer_tune
 from repro.core.workload import KernelUse
+from repro.targets import target_name
 
 
 def arch_uses(arch: str, shape: str = "train_4k", *, dp: int = 1, tp: int = 1
@@ -29,11 +30,13 @@ def arch_uses(arch: str, shape: str = "train_4k", *, dp: int = 1, tp: int = 1
 
 def tune_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
               dp: int = 1, tp: int = 1, total_trials: int = 1024, seed: int = 0,
-              runner: MeasureRunner | None = None, **kw) -> ModelTuneResult:
-    """Full auto-scheduling of one arch; records land in `db` under the arch id."""
+              runner: MeasureRunner | None = None, target=None,
+              **kw) -> ModelTuneResult:
+    """Full auto-scheduling of one arch for one hardware target; records land
+    in `db` under the arch id, namespaced by the target."""
     uses = arch_uses(arch, shape, dp=dp, tp=tp)
     res = tune_model(uses, model_id=arch, total_trials=total_trials, seed=seed,
-                     runner=runner, **kw)
+                     runner=runner, target=target, **kw)
     for r in res.records:
         db.add(r)
     return res
@@ -42,25 +45,34 @@ def tune_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
 def transfer_arch(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
                   dp: int = 1, tp: int = 1, donors: Sequence[str] | None | str = "auto",
                   mode: str = "strict", seed: int = 0,
-                  runner: MeasureRunner | None = None, **kw) -> TransferResult:
+                  runner: MeasureRunner | None = None, target=None,
+                  source_target=None, **kw) -> TransferResult:
     """Transfer-tune one arch from donor schedules.
 
     donors="auto" applies the Eq. 1 heuristic (excluding the arch itself);
     donors="auto2" the beyond-paper compatibility-aware variant;
     donors=None uses the full mixed pool (paper §5.5); otherwise a list.
 
+    ``target`` is the chip the arch will run on; ``source_target`` (optional)
+    draws the donor pool from another chip's namespace — cross-target
+    transfer, with every donor re-validated under ``target``'s spec.  The
+    Eq. 1 heuristic counts donors in the source namespace in that case.
+
     One ``runner`` (default: memoizing analytical) serves both donor
     selection and the transfer pass, so the untuned-seconds queries Eq. 1
     makes are never recomputed by the transfer loop.
     """
     uses = arch_uses(arch, shape, dp=dp, tp=tp)
-    runner = runner if runner is not None else default_runner()
+    runner, tname = resolve_runner(runner, target)
+    donor_tname = target_name(source_target) if source_target is not None else tname
     if donors in ("auto", "auto2"):
         pick = select_donor_v2 if donors == "auto2" else select_donor
-        best = pick(uses, db, exclude=(arch,), runner=runner)
+        best = pick(uses, db, exclude=(arch,), runner=runner,
+                    donor_target=donor_tname)
         donors = [best] if best is not None else []
     return transfer_tune(uses, db, model_id=arch, donors=donors, mode=mode,
-                         seed=seed, runner=runner, **kw)
+                         seed=seed, runner=runner, target=tname,
+                         donor_target=donor_tname, **kw)
 
 
 def tune_arch_registry(registry, arch: str, shape: str = "train_4k", *,
@@ -95,7 +107,7 @@ def transfer_arch_registry(registry, arch: str, shape: str = "train_4k", *,
     if publish:
         registry.publish(
             [Record(instance=k.instance, schedule=k.chosen, seconds=k.seconds,
-                    model_id=arch)
+                    model_id=arch, target=res.target)
              for k in res.kernels if k.chosen is not None],
             mode=mode)
     return res
@@ -103,6 +115,7 @@ def transfer_arch_registry(registry, arch: str, shape: str = "train_4k", *,
 
 def donor_ranking(db: ScheduleDB, arch: str, shape: str = "train_4k", *,
                   dp: int = 1, tp: int = 1, k: int = 3,
-                  runner: MeasureRunner | None = None):
+                  runner: MeasureRunner | None = None, donor_target=None):
     uses = arch_uses(arch, shape, dp=dp, tp=tp)
-    return top_donors(uses, db, k=k, exclude=(arch,), runner=runner)
+    return top_donors(uses, db, k=k, exclude=(arch,), runner=runner,
+                      donor_target=donor_target)

@@ -1,7 +1,18 @@
-from repro.hw.specs import TPU_V5E, ChipSpec, collective_time_s, compute_time_s, dim_efficiency, memory_time_s
+from repro.hw.specs import (
+    TPU_V5E,
+    TPU_V5E_LITE,
+    TPU_V5P,
+    ChipSpec,
+    collective_time_s,
+    compute_time_s,
+    dim_efficiency,
+    memory_time_s,
+)
 
 __all__ = [
     "TPU_V5E",
+    "TPU_V5E_LITE",
+    "TPU_V5P",
     "ChipSpec",
     "collective_time_s",
     "compute_time_s",

@@ -1,12 +1,21 @@
-"""Hardware constants for the target platform (TPU v5e) and roofline helpers.
+"""Hardware constants for the supported target platforms and roofline helpers.
 
-This container is CPU-only; v5e is the *target*. Every performance number in
-the framework (cost model, roofline terms) is derived from these constants,
-so they live in exactly one place.
+This container is CPU-only; the TPU chips are *targets*.  Every performance
+number in the framework (cost model, roofline terms) is derived from these
+constants, so they live in exactly one place.  Named specs are registered as
+:class:`repro.targets.Target` entries — resolve them by name through
+``repro.targets.get_target`` rather than importing constants directly.
+
+``TPU_V5E`` is the paper-analogue server-class chip every seed experiment
+used.  ``TPU_V5E_LITE`` is a constrained edge analogue (the paper's A7x-class
+platform): one MXU worth of FLOPs, a narrow LPDDR-like memory system, and a
+small VMEM budget that makes many server-tuned schedules structurally
+invalid.  ``TPU_V5P`` is the larger pod-scale chip.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +43,27 @@ TPU_V5E = ChipSpec(
     ici_links=4,
 )
 
+TPU_V5E_LITE = ChipSpec(
+    name="tpu-v5e-lite",
+    peak_flops_bf16=25e12,        # single-MXU edge part
+    hbm_bandwidth=102e9,          # LPDDR-class memory system
+    hbm_capacity=4 * 1024**3,     # 4 GiB
+    vmem_capacity=8 * 1024**2,    # 8 MiB usable — large server tiles overflow
+    ici_bandwidth=10e9,           # single narrow link
+    ici_links=1,
+    kernel_launch_overhead_s=8e-6,
+)
+
+TPU_V5P = ChipSpec(
+    name="tpu-v5p",
+    peak_flops_bf16=459e12,       # 459 TFLOP/s bf16
+    hbm_bandwidth=2765e9,         # 2.77 TB/s HBM2e
+    hbm_capacity=95 * 1024**3,    # 95 GiB
+    vmem_capacity=112 * 1024**2,  # 112 MiB usable of 128 MiB
+    ici_bandwidth=100e9,          # 3D-torus links
+    ici_links=6,
+)
+
 
 def compute_time_s(flops: float, chips: int = 1, spec: ChipSpec = TPU_V5E) -> float:
     return flops / (chips * spec.peak_flops_bf16)
@@ -56,7 +86,5 @@ def dim_efficiency(block: int, native: int) -> float:
     """
     if block <= 0:
         return 0.0
-    import math
-
     padded = math.ceil(block / native) * native
     return block / padded

@@ -14,6 +14,11 @@ Schedule resolution is pluggable:
   later requests pick them up — the service's ``stats()`` land in the
   result JSON.  ``--tuning-workers 0`` defers jobs (drained at exit);
   the provider only affects the ``pallas`` backend (``--backend``).
+
+``--target`` selects the hardware namespace served (schedules tuned for one
+chip never silently serve another); ``--tuning-donor-target`` optionally
+draws transfer donors from a different chip's namespace (explicit
+cross-target serving, re-validated under ``--target``'s spec).
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ import numpy as np
 from repro.configs.base import get_arch, reduced
 from repro.core.database import ScheduleDB
 from repro.kernels.ops import ScheduleProvider, set_default_provider, use_backend
+from repro.targets import DEFAULT_TARGET, list_targets
 from repro.models.build import build_model
 from repro.serving import ServingEngine
 
@@ -37,14 +43,19 @@ def make_provider(args) -> tuple[ScheduleProvider, object | None]:
     schedule_map = {}
     if args.tuning_db:
         db = ScheduleDB.load(args.tuning_db)
-        schedule_map = {r.instance.workload_key(): r.schedule for r in db.records()}
+        # Only this target's namespace: a record tuned for another chip must
+        # never serve here, even through the frozen offline path.
+        schedule_map = {r.instance.workload_key(): r.schedule
+                       for r in db.records() if r.target == args.target}
     if args.tuning_registry:
         from repro.service import ScheduleRegistry, TuningService
 
         registry = ScheduleRegistry(args.tuning_registry)
         service = TuningService(registry, model_id=f"serve/{args.arch}",
                                 max_workers=args.tuning_workers,
-                                budget_s=args.tuning_budget_s)
+                                budget_s=args.tuning_budget_s,
+                                target=args.target,
+                                donor_target=args.tuning_donor_target)
     return ScheduleProvider(schedule_map, service=service), service
 
 
@@ -57,6 +68,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--backend", choices=["ref", "pallas"], default="ref")
+    ap.add_argument("--target", choices=list_targets(), default=DEFAULT_TARGET,
+                    help="hardware target to serve schedules for; the tuning "
+                         "service only reads/publishes this chip's namespace")
+    ap.add_argument("--tuning-donor-target", choices=list_targets(), default=None,
+                    help="draw transfer donors from another chip's namespace "
+                         "(cross-target serving; default: --target)")
     ap.add_argument("--tuning-db", default="")
     ap.add_argument("--tuning-registry", default="",
                     help="schedule-registry dir: serve through TuningService")
@@ -109,6 +126,7 @@ def main(argv=None) -> dict:
     toks = sum(len(r.generated) for r in done)
     result = {"requests": len(done), "decode_steps": steps,
               "tokens": toks, "tok_per_s": round(toks / dt, 1),
+              "target": args.target,
               "schedule_hits": provider.hits, "schedule_misses": provider.misses}
     if service is not None:
         result["tuning_service"] = service.stats()

@@ -16,8 +16,10 @@ file with an append-only *segmented* store:
   :class:`RegistrySnapshot` swapped wholesale under the writer lock; readers
   (the serving path) just dereference an attribute — no lock, no torn state;
 * **compaction** folds all segments into one, keeping the best record per
-  ``(workload, mode)`` — the serving registry's steady-state footprint is
-  one record per workload it has ever answered;
+  ``(workload, mode, target)`` — the serving registry's steady-state
+  footprint is one record per workload it has ever answered per chip; with
+  ``auto_compact_segments=N`` it fires automatically once a publish pushes
+  the segment count past N;
 * **merge** of concurrently produced :class:`~repro.core.database.ScheduleDB`
   instances is just ``merge_db()``: each producer lands as its own segment
   and compaction resolves duplicates later.
@@ -73,8 +75,11 @@ class RegistryRecord:
         return RegistryRecord(record=Record.from_json(d["record"]),
                               mode=d.get("mode", "strict"))
 
-    def key(self) -> tuple[str, str]:
-        return (self.record.instance.workload_key(), self.mode)
+    def key(self) -> tuple[str, str, str]:
+        # Target is part of the dedup key: compaction must never fold a
+        # record tuned for one chip into another chip's namespace.
+        return (self.record.instance.workload_key(), self.mode,
+                self.record.target)
 
 
 class RegistrySnapshot:
@@ -138,10 +143,17 @@ class ScheduleRegistry:
     :meth:`merge_db`, the pattern the tuning service uses.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, *, auto_compact_segments: int | None = None):
+        """``auto_compact_segments=N`` makes ``publish()`` fold the store the
+        moment the segment count crosses N — a long-lived service otherwise
+        accumulates one segment per publish, unboundedly."""
+        if auto_compact_segments is not None and auto_compact_segments < 1:
+            raise ValueError("auto_compact_segments must be >= 1")
         self.root = os.path.abspath(root)
         os.makedirs(os.path.join(self.root, SEGMENT_DIR), exist_ok=True)
         self._write_lock = threading.Lock()
+        self.auto_compact_segments = auto_compact_segments
+        self.compactions = 0
         self.recovered_partial_lines = 0
         if not os.path.exists(self._manifest_path()):
             self._write_manifest({"version": SCHEMA_VERSION, "generation": 0,
@@ -238,6 +250,9 @@ class ScheduleRegistry:
             "generation": self._snapshot.generation,
             "records": len(self._snapshot),
             "segments": len(manifest["segments"]),
+            "targets": sorted({rr.record.target for rr in self._snapshot.records}),
+            "compactions": self.compactions,
+            "auto_compact_segments": self.auto_compact_segments,
             "recovered_partial_lines": self.recovered_partial_lines,
         }
 
@@ -270,6 +285,9 @@ class ScheduleRegistry:
             else:
                 self._snapshot = RegistrySnapshot(
                     manifest["generation"], self._snapshot.records + tuple(rrs))
+            if (self.auto_compact_segments is not None
+                    and len(manifest["segments"]) > self.auto_compact_segments):
+                self._compact_locked()
             return self._snapshot.generation
 
     def merge_db(self, db: ScheduleDB, mode: str = "strict") -> int:
@@ -278,32 +296,38 @@ class ScheduleRegistry:
 
     def compact(self) -> int:
         """Fold all segments into one, keeping the best record per
-        (workload, mode).  Readers holding the old snapshot are unaffected;
-        the manifest swap is atomic and old segment files are removed only
-        after it lands."""
+        (workload, mode, target).  Readers holding the old snapshot are
+        unaffected; the manifest swap is atomic and old segment files are
+        removed only after it lands."""
         with self._write_lock:
-            manifest = self._read_manifest()
-            records: list[RegistryRecord] = []
-            for name in manifest["segments"]:
-                records.extend(self._read_segment(name))
-            best: dict[tuple[str, str], RegistryRecord] = {}
-            for rr in records:
-                cur = best.get(rr.key())
-                if cur is None or rr.record.seconds < cur.record.seconds:
-                    best[rr.key()] = rr
-            kept = sorted(
-                best.values(),
-                key=lambda rr: (rr.record.instance.class_id, rr.mode,
-                                rr.record.instance.workload_key()))
-            old_segments = list(manifest["segments"])
-            name = f"seg-{manifest['next_segment']:06d}.jsonl"
-            self._write_segment(name, kept)
-            manifest["segments"] = [name]
-            manifest["next_segment"] += 1
-            manifest["generation"] += 1
-            self._write_manifest(manifest)
-            self._snapshot = RegistrySnapshot(manifest["generation"], kept)
-            for old in old_segments:
-                if old != name and os.path.exists(self._segment_path(old)):
-                    os.unlink(self._segment_path(old))
-            return self._snapshot.generation
+            return self._compact_locked()
+
+    def _compact_locked(self) -> int:
+        # Caller holds self._write_lock (publish() auto-compaction re-enters
+        # here without re-acquiring the non-reentrant lock).
+        manifest = self._read_manifest()
+        records: list[RegistryRecord] = []
+        for name in manifest["segments"]:
+            records.extend(self._read_segment(name))
+        best: dict[tuple[str, str, str], RegistryRecord] = {}
+        for rr in records:
+            cur = best.get(rr.key())
+            if cur is None or rr.record.seconds < cur.record.seconds:
+                best[rr.key()] = rr
+        kept = sorted(
+            best.values(),
+            key=lambda rr: (rr.record.target, rr.record.instance.class_id,
+                            rr.mode, rr.record.instance.workload_key()))
+        old_segments = list(manifest["segments"])
+        name = f"seg-{manifest['next_segment']:06d}.jsonl"
+        self._write_segment(name, kept)
+        manifest["segments"] = [name]
+        manifest["next_segment"] += 1
+        manifest["generation"] += 1
+        self._write_manifest(manifest)
+        self._snapshot = RegistrySnapshot(manifest["generation"], kept)
+        self.compactions += 1
+        for old in old_segments:
+            if old != name and os.path.exists(self._segment_path(old)):
+                os.unlink(self._segment_path(old))
+        return self._snapshot.generation

@@ -35,10 +35,11 @@ from concurrent.futures import Future, ThreadPoolExecutor, wait
 from typing import Sequence
 
 from repro.core.database import Record, ScheduleDB
-from repro.core.runner import MeasureRunner, default_runner
+from repro.core.runner import MeasureRunner, resolve_runner
 from repro.core.schedule import Schedule, ScheduleInvalid
 from repro.core.transfer import _strongest_first, transfer_tune
 from repro.core.workload import KernelInstance, KernelUse
+from repro.targets import target_name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,13 @@ class TuningService:
     model in the registry except ``model_id`` (this service's own published
     upgrades) is a donor, which keeps background jobs equivalent to an
     offline run against the donor-only store.
+
+    ``target`` names the chip this service serves: the exact tier only reads
+    that target's namespace, every published upgrade lands in it, and the
+    donor pool comes from ``donor_target`` (default: ``target``).  Setting
+    ``donor_target`` to a different chip is the explicit cross-target serving
+    setup — e.g. an edge service transfer-tuning from a server-tuned store —
+    with every donor re-validated under ``target``'s spec before it can win.
     """
 
     def __init__(self, registry, *, model_id: str = "serving",
@@ -83,10 +91,13 @@ class TuningService:
                  seed: int = 0, noise_sigma: float = 0.05,
                  donors: Sequence[str] | None = None,
                  budget_s: float = float("inf"), max_workers: int = 2,
-                 probe_candidates: int | None = 4):
+                 probe_candidates: int | None = 4,
+                 target=None, donor_target=None):
         self.registry = registry
         self.model_id = model_id
-        self.runner = runner if runner is not None else default_runner()
+        self.runner, self.target = resolve_runner(runner, target)
+        self.donor_target = (target_name(donor_target)
+                             if donor_target is not None else self.target)
         self.mode = mode
         self.seed = seed
         self.noise_sigma = noise_sigma
@@ -113,7 +124,8 @@ class TuningService:
     def _donor_models(self, db: ScheduleDB) -> list[str]:
         if self.donors is not None:
             return list(self.donors)
-        return [m for m in db.models() if m != self.model_id]
+        return [m for m in db.models(target=self.donor_target)
+                if m != self.model_id]
 
     def lookup(self, instance: KernelInstance) -> LookupResult:
         snap = self.registry.snapshot()
@@ -129,7 +141,11 @@ class TuningService:
         # Best exact record overall, falling back to the best record published
         # under this service's own mode when the overall winner doesn't bind
         # (e.g. a faster adaptive-mode record shadowing a valid strict one).
-        for exact in (db.exact(instance), snap.db(self.mode).exact(instance)):
+        # Both reads stay inside this service's target namespace: a same-shape
+        # record from another chip was selected under the wrong roofline (and
+        # may not even fit this chip's VMEM), so it is never an exact hit.
+        for exact in (db.exact(instance, target=self.target),
+                      snap.db(self.mode).exact(instance, target=self.target)):
             if exact is None:
                 continue
             try:
@@ -150,7 +166,8 @@ class TuningService:
         candidates: list[Record] = []
         if self.probe_candidates != 0:
             candidates = db.by_class(instance.class_id,
-                                     models=self._donor_models(db))
+                                     models=self._donor_models(db),
+                                     target=self.donor_target)
             if (self.probe_candidates is not None
                     and len(candidates) > self.probe_candidates):
                 # Same ranking the offline transfer path truncates with.
@@ -217,7 +234,8 @@ class TuningService:
             res = transfer_tune(
                 [KernelUse(instance)], db, model_id=self.model_id,
                 donors=self._donor_models(db), mode=self.mode, seed=self.seed,
-                noise_sigma=self.noise_sigma, runner=self.runner)
+                noise_sigma=self.noise_sigma, runner=self.runner,
+                target=self.target, donor_target=self.donor_target)
             with self._lock:
                 self._spent_s += res.search_time_s
             k = res.kernels[0]
@@ -241,14 +259,15 @@ class TuningService:
                  seconds: float, donor: str) -> bool:
         """Publish atomically unless it would downgrade the visible best."""
         with self._publish_lock:
-            current = self.registry.snapshot().db(None).exact(instance)
+            current = self.registry.snapshot().db(None).exact(
+                instance, target=self.target)
             if current is not None and current.seconds <= seconds:
                 with self._lock:
                     self._counters["publish_skipped"] += 1
                 return False
             self.registry.publish(
                 [Record(instance=instance, schedule=schedule, seconds=seconds,
-                        model_id=self.model_id)],
+                        model_id=self.model_id, target=self.target)],
                 mode=self.mode)
             with self._lock:
                 self._counters["upgrades"] += 1
@@ -297,6 +316,8 @@ class TuningService:
             out["probe_search_s"] = self._probe_s
             out["budget_s"] = self.budget_s
         out["generation"] = self.registry.generation
+        out["target"] = self.target
+        out["donor_target"] = self.donor_target
         lookups = out["lookups"] or 1
         out["exact_hit_rate"] = out["exact_hits"] / lookups
         return out

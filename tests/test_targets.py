@@ -1,0 +1,305 @@
+"""Multi-target subsystem: registry, namespacing, cross-target transfer."""
+import dataclasses
+
+import pytest
+
+from repro.core.autoscheduler import tune_kernel
+from repro.core.database import Record, ScheduleDB
+from repro.core.runner import AnalyticalRunner, CachedRunner, default_runner, resolve_runner
+from repro.core.schedule import Schedule, default_schedule
+from repro.core.transfer import cross_target_transfer, transfer_tune
+from repro.core.workload import KernelInstance, KernelUse
+from repro.hw.specs import TPU_V5E, TPU_V5E_LITE, TPU_V5P, dim_efficiency
+from repro.service import ScheduleRegistry, TuningService
+from repro.targets import (
+    DEFAULT_TARGET,
+    Target,
+    get_target,
+    list_targets,
+    register_target,
+    resolve_target,
+    target_name,
+)
+
+SERVER, EDGE = "tpu-v5e", "tpu-v5e-lite"
+
+
+def g(m, n=None, k=None):
+    return KernelInstance.make("matmul", M=m, N=n or m, K=k or m)
+
+
+def sched(bm, bn, bk):
+    return Schedule.make("matmul", tiles={"M": bm, "N": bn, "K": bk},
+                         order=("M", "N", "K"))
+
+
+#: Valid on v5e (≈18 MiB VMEM), overflows the lite chip's 8 MiB budget.
+BIG = sched(1024, 2048, 512)
+#: Fits every registered target.
+SMALL = sched(128, 256, 256)
+
+
+# ---------------------------------------------------------------------------
+# Target registry
+# ---------------------------------------------------------------------------
+
+
+def test_registered_targets_and_specs():
+    assert {"tpu-v5e", "tpu-v5e-lite", "tpu-v5p"} <= set(list_targets())
+    assert get_target("tpu-v5e").spec == TPU_V5E
+    assert get_target("tpu-v5e").tier == "server"
+    assert get_target(EDGE).tier == "edge"
+    lite, v5p = get_target(EDGE).spec, get_target("tpu-v5p").spec
+    assert lite.vmem_capacity < TPU_V5E.vmem_capacity < v5p.vmem_capacity
+    assert lite.peak_flops_bf16 < TPU_V5E.peak_flops_bf16 < v5p.peak_flops_bf16
+    assert lite.hbm_bandwidth < TPU_V5E.hbm_bandwidth < v5p.hbm_bandwidth
+
+
+def test_resolve_target_forms():
+    assert resolve_target(None).name == DEFAULT_TARGET
+    assert resolve_target(EDGE).spec == TPU_V5E_LITE
+    t = get_target("tpu-v5p")
+    assert resolve_target(t) is t
+    assert resolve_target(TPU_V5P) is t            # registered spec round-trips
+    custom = dataclasses.replace(TPU_V5E, name="my-chip", vmem_capacity=1 << 20)
+    anon = resolve_target(custom)
+    assert anon.name == "my-chip" and anon.spec is custom
+    # A different chip wearing a registered name would alias two namespaces.
+    imposter = dataclasses.replace(TPU_V5E, vmem_capacity=1 << 20)
+    with pytest.raises(ValueError, match="distinct name"):
+        resolve_target(imposter)
+    with pytest.raises(KeyError, match="tpu-v5e"):  # lists available targets
+        get_target("nonexistent-chip")
+
+
+def test_register_target_guard():
+    with pytest.raises(ValueError, match="already registered"):
+        register_target(Target("tpu-v5e", TPU_V5E))
+    with pytest.raises(ValueError, match="tier"):
+        Target("x", TPU_V5E, tier="mainframe")
+
+
+def test_target_name_passthrough():
+    assert target_name(None) == DEFAULT_TARGET
+    assert target_name("anything-goes") == "anything-goes"
+    assert target_name(get_target(EDGE)) == EDGE
+    assert target_name(TPU_V5P) == "tpu-v5p"
+
+
+# ---------------------------------------------------------------------------
+# dim_efficiency edge cases (hw/specs.py)
+# ---------------------------------------------------------------------------
+
+
+def test_dim_efficiency_edge_cases():
+    assert dim_efficiency(0, 128) == 0.0
+    assert dim_efficiency(-8, 128) == 0.0
+    assert dim_efficiency(128, 128) == 1.0
+    assert dim_efficiency(256, 128) == 1.0          # exact multiple: no waste
+    assert dim_efficiency(96, 128) == pytest.approx(96 / 128)
+    # block > native pays only for its remainder tile: 192 pads to 256
+    assert dim_efficiency(192, 128) == pytest.approx(192 / 256)
+    assert dim_efficiency(1, 8) == pytest.approx(1 / 8)
+
+
+# ---------------------------------------------------------------------------
+# Runner target identity
+# ---------------------------------------------------------------------------
+
+
+def test_runner_targets_and_cache_isolation():
+    assert AnalyticalRunner().target == DEFAULT_TARGET
+    assert CachedRunner(AnalyticalRunner(EDGE)).target == EDGE
+    assert default_runner("tpu-v5p").target == "tpu-v5p"
+    # The same (instance, schedule) question must measure differently per chip.
+    inst = g(512)
+    s_server = default_runner(SERVER).measure(inst, SMALL, noise_sigma=0.0).seconds
+    s_edge = default_runner(EDGE).measure(inst, SMALL, noise_sigma=0.0).seconds
+    assert s_edge > s_server
+
+
+def test_resolve_runner_mismatch_raises():
+    r = default_runner(SERVER)
+    assert resolve_runner(r, SERVER) == (r, SERVER)
+    assert resolve_runner(r, None) == (r, SERVER)
+    with pytest.raises(ValueError, match="measures target"):
+        resolve_runner(r, EDGE)
+
+
+def test_vmem_valid_on_server_invalid_on_edge():
+    inst = g(2048)
+    assert default_runner(SERVER).measure(inst, BIG).valid
+    assert not default_runner(EDGE).measure(inst, BIG).valid
+    assert default_runner(EDGE).measure(inst, SMALL).valid
+
+
+# ---------------------------------------------------------------------------
+# ScheduleDB namespacing + persistence
+# ---------------------------------------------------------------------------
+
+
+def test_db_namespaces_never_leak():
+    inst = g(512)
+    db = ScheduleDB()
+    db.add(Record(inst, SMALL, 1.0, "m", target=SERVER))
+    db.add(Record(inst, SMALL, 0.1, "m", target=EDGE))  # faster, other chip
+    assert db.targets() == sorted((SERVER, EDGE))
+    assert db.exact(inst, target=SERVER).target == SERVER
+    assert db.exact(inst, target=SERVER).seconds == 1.0  # not the faster edge one
+    assert db.exact(inst, target=EDGE).seconds == 0.1
+    assert db.exact(inst) == db.exact(inst, target=DEFAULT_TARGET)
+    assert db.exact(inst, target="tpu-v5p") is None
+    assert [r.target for r in db.by_class("matmul", target=EDGE)] == [EDGE]
+    assert db.models(target=EDGE) == ["m"]
+    assert db.models(target="tpu-v5p") == []
+    assert db.class_counts("m", target=EDGE) == {"matmul": 1}
+
+
+def test_db_save_load_preserves_target(tmp_path):
+    db = ScheduleDB([Record(g(256), SMALL, 1.0, "m", target=EDGE)])
+    path = str(tmp_path / "db.json")
+    db.save(path)
+    back = ScheduleDB.load(path)
+    assert back.records()[0].target == EDGE
+    assert back.exact(g(256), target=EDGE) is not None
+
+
+def test_legacy_record_without_target_reads_as_default():
+    d = Record(g(256), SMALL, 1.0, "m").to_json()
+    del d["target"]  # pre-subsystem stores never wrote the field
+    assert Record.from_json(d).target == DEFAULT_TARGET
+
+
+# ---------------------------------------------------------------------------
+# Cross-target transfer
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def server_db():
+    """Donor pool tuned on the server chip: one edge-infeasible, one portable."""
+    inst = g(2048)
+    runner = default_runner(SERVER)
+    return ScheduleDB([
+        Record(inst, BIG, runner.measure(inst, BIG, noise_sigma=0.0).seconds,
+               "donor", target=SERVER),
+        Record(inst, SMALL, runner.measure(inst, SMALL, noise_sigma=0.0).seconds,
+               "donor", target=SERVER),
+    ])
+
+
+def test_cross_target_rejects_edge_infeasible_donors(server_db):
+    uses = [KernelUse(g(1024, 2048, 2048))]
+    res = cross_target_transfer(uses, server_db, source_target=SERVER,
+                                target=EDGE, donors=["donor"])
+    assert res.target == EDGE and res.donor_target == SERVER
+    assert res.invalid_transfers >= 1          # BIG overflows the edge VMEM
+    k = res.kernels[0]
+    assert k.chosen != BIG                     # the infeasible donor never wins
+    assert res.tuned_seconds <= res.untuned_seconds
+
+
+def test_cross_target_same_chip_rejected(server_db):
+    with pytest.raises(ValueError, match="both"):
+        cross_target_transfer([KernelUse(g(512))], server_db,
+                              source_target=SERVER, target=SERVER)
+
+
+def test_same_shape_foreign_record_is_not_an_exact_hit(server_db):
+    # The donor tuned the *identical* workload on the server chip; on the
+    # edge chip that record must be re-measured as a candidate, never reused
+    # as a zero-cost exact hit.
+    inst = g(2048)
+    res = transfer_tune([KernelUse(inst)], server_db, donors=["donor"],
+                        target=EDGE, donor_target=SERVER)
+    assert not res.kernels[0].exact_hit
+    assert res.kernels[0].candidates == 2
+    same = transfer_tune([KernelUse(inst)], server_db, donors=["donor"],
+                         target=SERVER)
+    assert same.kernels[0].exact_hit
+
+
+def test_tune_kernel_tags_target():
+    res = tune_kernel(g(256), trials=24, seed=0, target=EDGE)
+    assert res.target == EDGE
+    # every surviving schedule fits the edge VMEM by construction
+    m = default_runner(EDGE).measure(g(256), res.best)
+    assert m.valid
+
+
+# ---------------------------------------------------------------------------
+# Registry / service namespacing
+# ---------------------------------------------------------------------------
+
+
+def test_service_lookup_never_serves_foreign_target(tmp_path):
+    inst = g(512)
+    reg = ScheduleRegistry(str(tmp_path / "reg"))
+    reg.publish([Record(inst, SMALL, 1e-9, "donor", target=SERVER)])
+
+    edge_svc = TuningService(reg, runner=default_runner(EDGE), target=EDGE,
+                             max_workers=0, probe_candidates=0)
+    res = edge_svc.lookup(inst)
+    assert res.tier != "exact"                  # the v5e record is invisible
+    assert res.schedule is None
+    assert edge_svc.stats()["target"] == EDGE
+
+    server_svc = TuningService(reg, runner=default_runner(SERVER),
+                               max_workers=0, probe_candidates=0)
+    assert server_svc.lookup(inst).tier == "exact"
+
+
+def test_edge_service_cross_target_donors(tmp_path):
+    """Explicit cross-target serving: edge service, server-tuned donor pool."""
+    donor_inst, target_inst = g(2048), g(1024, 2048, 2048)
+    reg = ScheduleRegistry(str(tmp_path / "reg"))
+    runner = default_runner(SERVER)
+    reg.publish([
+        Record(donor_inst, s, runner.measure(donor_inst, s, noise_sigma=0.0).seconds,
+               "donor", target=SERVER)
+        for s in (BIG, SMALL)
+    ])
+    svc = TuningService(reg, runner=default_runner(EDGE), target=EDGE,
+                        donor_target=SERVER, max_workers=0, seed=0)
+    first = svc.lookup(target_inst)
+    assert first.tier in ("transfer", "default")
+    svc.drain()
+    upgraded = svc.lookup(target_inst)
+    rec = reg.snapshot().db(None).exact(target_inst, target=EDGE)
+    if rec is not None:                         # job published into EDGE only
+        assert upgraded.tier == "exact"
+        assert rec.target == EDGE
+    assert reg.snapshot().db(None).exact(target_inst, target=SERVER) is None
+
+
+def test_registry_auto_compact(tmp_path):
+    reg = ScheduleRegistry(str(tmp_path / "reg"), auto_compact_segments=3)
+    for i in range(5):
+        reg.publish([Record(g(512), SMALL, float(5 - i), f"m{i}")])
+    stats = reg.stats()
+    # Folds the moment a publish pushes the count past the threshold, so the
+    # store never exceeds it (5 unbounded publishes would leave 5 segments).
+    assert stats["segments"] <= 3
+    assert stats["compactions"] >= 1
+    assert reg.snapshot().db(None).exact(g(512)).seconds == 1.0  # best kept
+
+    # Reopen: the compacted store is the durable state.
+    reopened = ScheduleRegistry(str(tmp_path / "reg"))
+    assert reopened.stats()["segments"] <= 3
+    assert reopened.snapshot().db(None).exact(g(512)).seconds == 1.0
+
+    with pytest.raises(ValueError, match="auto_compact_segments"):
+        ScheduleRegistry(str(tmp_path / "reg2"), auto_compact_segments=0)
+
+
+def test_compaction_keeps_best_per_target(tmp_path):
+    inst = g(512)
+    reg = ScheduleRegistry(str(tmp_path / "reg"))
+    reg.publish([Record(inst, SMALL, 1.0, "m", target=SERVER)])
+    reg.publish([Record(inst, SMALL, 2.0, "m", target=EDGE)])
+    reg.publish([Record(inst, SMALL, 0.5, "m", target=SERVER)])
+    reg.compact()
+    db = reg.snapshot().db(None)
+    assert len(reg.snapshot()) == 2             # one per (workload, target)
+    assert db.exact(inst, target=SERVER).seconds == 0.5
+    assert db.exact(inst, target=EDGE).seconds == 2.0
