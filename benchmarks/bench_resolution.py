@@ -1,0 +1,218 @@
+"""Execution-plan resolution pipeline benchmark.
+
+Two claims, one module:
+
+1. **Resolution overhead** — at steady state (every workload's upgrade
+   published), the per-call path pays one full
+   :class:`~repro.service.TuningService.lookup` (service lock, counters,
+   snapshot walk, re-``concretize``) per kernel per served token, while the
+   plan path resolves each workload once (:func:`plan_model`) and serves
+   dict hits afterwards.  We count actual service/stage lookups per served
+   token on both paths and require a ≥5x reduction with **byte-identical**
+   chosen schedules.
+
+2. **Live upgrades** — a schedule published to the registry *while a
+   ServingEngine is serving* reaches that engine without a restart: the
+   engine detects the generation bump at the next decode-step boundary,
+   re-plans, and serves the upgraded (exact-tier) schedule — never swapping
+   a plan mid-step.
+
+``--preset smoke`` (CI) tunes the donor at a small trial budget.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import shutil
+import tempfile
+
+import jax
+
+from benchmarks import common
+from repro.configs import get_arch, reduced
+from repro.core.database import Record
+from repro.core.resolution import ResolutionPipeline, plan_model
+from repro.core.runner import AnalyticalRunner, CachedRunner
+from repro.core.schedule import default_schedule
+from repro.core.tuner import arch_uses, tune_arch_registry
+from repro.kernels.ops import ScheduleProvider
+from repro.models import build_model
+from repro.serving import ServingEngine
+from repro.service import ScheduleRegistry, TuningService
+
+TARGET = "stablelm-12b"
+PRESETS = {
+    "smoke": {"donors": ["internvl2-26b"], "trials": 192, "tokens": 8},
+    "full": {"donors": ["internvl2-26b", "starcoder2-7b"], "trials": 768,
+             "tokens": 32},
+}
+
+
+def _schedule_bytes(sched) -> str:
+    return json.dumps(sched.to_json(), sort_keys=True)
+
+
+def _steady_state_overhead(p: dict, registry: ScheduleRegistry) -> dict:
+    """Lookups per served token: per-call path vs pre-resolved plan."""
+    uses = arch_uses(TARGET, common.SHAPE, dp=common.DP, tp=common.TP)
+    runner = CachedRunner(AnalyticalRunner())
+    tokens = p["tokens"]
+
+    # Warm to steady state: one pass enqueues the background jobs, drain
+    # publishes every upgrade the donor pool supports.
+    warm = TuningService(registry, model_id=TARGET, runner=runner,
+                         donors=list(p["donors"]), seed=common.SEED,
+                         max_workers=0, probe_candidates=0)
+    for u in uses:
+        warm.lookup(u.instance)
+    warm.drain()
+
+    # Per-call path (the pre-plan provider): every kernel call of every
+    # served token is one service lookup + concretize.
+    percall = TuningService(registry, model_id=TARGET, runner=runner,
+                            donors=list(p["donors"]), seed=common.SEED,
+                            max_workers=0, probe_candidates=0)
+    percall_chosen = {}
+    for _ in range(tokens):
+        for u in uses:
+            lr = percall.lookup(u.instance)
+            percall_chosen[u.instance.workload_key()] = (
+                lr.schedule if lr.schedule is not None
+                else default_schedule(u.instance))
+    percall_lookups = percall.stats()["lookups"]
+
+    # Plan path: resolve once into an ExecutionPlan, then serve dict hits.
+    planned = TuningService(registry, model_id=TARGET, runner=runner,
+                            donors=list(p["donors"]), seed=common.SEED,
+                            max_workers=0, probe_candidates=0)
+    pipeline = ResolutionPipeline.build(service=planned, mode="strict")
+    plan = plan_model(TARGET, pipeline, common.SHAPE, dp=common.DP, tp=common.TP)
+    provider = ScheduleProvider(pipeline=pipeline, plan=plan)
+    for _ in range(tokens):
+        for u in uses:
+            provider.get(u.instance)
+    plan_lookups = planned.stats()["lookups"]  # all spent during planning
+
+    mismatches = sum(
+        1 for u in uses
+        if _schedule_bytes(plan.lookup(u.instance).schedule)
+        != _schedule_bytes(percall_chosen[u.instance.workload_key()]))
+    return {
+        "kernels": len(uses),
+        "tokens": tokens,
+        "percall_lookups": percall_lookups,
+        "percall_lookups_per_token": percall_lookups / tokens,
+        "plan_lookups": plan_lookups,
+        "plan_lookups_per_token": plan_lookups / tokens,
+        "reduction": percall_lookups / max(plan_lookups, 1),
+        "schedule_mismatches": mismatches,
+        "plan_tiers": plan.tier_counts(),
+        "pipeline": pipeline.stats(),
+        "plan_hits": provider.plan_hits,
+    }
+
+
+def _live_upgrade(root: str) -> dict:
+    """A mid-serve registry publish reaches a running ServingEngine."""
+    cfg = reduced(get_arch("minitron-4b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    registry = ScheduleRegistry(root)
+    service = TuningService(registry, model_id="serve", max_workers=0,
+                            probe_candidates=0,
+                            runner=CachedRunner(AnalyticalRunner()))
+    provider = ScheduleProvider(service=service)
+    engine = ServingEngine(model, params, slots=2, max_len=32,
+                           provider=provider)
+    engine.add_request([1, 2, 3], max_new_tokens=8)
+    engine.add_request([4, 5, 6, 7], max_new_tokens=8)
+    engine.step()
+    engine.step()
+    gen_before = engine.plan.generation
+
+    # Background tuning (simulated: a direct registry publish) lands while
+    # the engine is mid-stream.
+    inst = next(u.instance for u in engine.plan.uses
+                if u.instance.class_id == "matmul")
+    upgraded = dataclasses.replace(default_schedule(inst), unroll=4,
+                                   source="background")
+    registry.publish([Record(instance=inst, schedule=upgraded,
+                             seconds=service.runner.seconds(inst, upgraded),
+                             model_id="background", target=service.target)])
+
+    engine.run_to_completion()
+    entry = engine.plan.lookup(inst)
+    generations = [g for _, g in engine.plan_history]
+    swaps_at_boundary = (
+        generations == sorted(generations)  # generation only ever advances
+        and generations[0] == gen_before
+        and generations[-1] > gen_before)
+    return {
+        "replans": engine.replans,
+        "plan_generation_before": gen_before,
+        "plan_generation_after": engine.plan.generation,
+        "plan_history": engine.plan_history,
+        "upgraded_tier": entry.tier,
+        "upgraded_schedule_matches": (
+            _schedule_bytes(entry.schedule) == _schedule_bytes(upgraded)),
+        "swaps_at_step_boundary_only": swaps_at_boundary,
+        "prefill_traces": engine.prefill_trace_count,
+    }
+
+
+def run(preset: str = "smoke") -> list[tuple]:
+    p = PRESETS[preset]
+    root = tempfile.mkdtemp(prefix="resolution-registry-")
+    live_root = tempfile.mkdtemp(prefix="resolution-live-")
+    try:
+        registry = ScheduleRegistry(root)
+        for donor in p["donors"]:
+            tune_arch_registry(registry, donor, common.SHAPE, dp=common.DP,
+                               tp=common.TP, total_trials=p["trials"],
+                               seed=common.SEED)
+        steady = _steady_state_overhead(p, registry)
+        live = _live_upgrade(live_root)
+
+        reduction_ok = (steady["reduction"] >= 5
+                        and steady["schedule_mismatches"] == 0)
+        live_ok = (live["replans"] >= 1 and live["upgraded_tier"] == "exact"
+                   and live["upgraded_schedule_matches"]
+                   and live["swaps_at_step_boundary_only"])
+        rows = [
+            ("resolution/percall_lookups_per_token",
+             round(steady["percall_lookups_per_token"], 1),
+             f"kernels={steady['kernels']} tokens={steady['tokens']}"),
+            ("resolution/plan_lookups_per_token",
+             round(steady["plan_lookups_per_token"], 1),
+             f"plan_hits={steady['plan_hits']} "
+             f"tiers={steady['plan_tiers']}"),
+            ("resolution/lookup_reduction", round(steady["reduction"], 1),
+             f">=5x with byte-identical schedules "
+             f"(mismatches={steady['schedule_mismatches']}): "
+             f"{'PASS' if reduction_ok else 'FAIL'}"),
+            ("resolution/live_upgrade_replans", live["replans"],
+             f"tier={live['upgraded_tier']} boundary_only="
+             f"{live['swaps_at_step_boundary_only']}: "
+             f"{'PASS' if live_ok else 'FAIL'}"),
+        ]
+        common.save_result("resolution", {
+            "preset": preset,
+            "target": TARGET,
+            "donors": p["donors"],
+            "trials": p["trials"],
+            "steady_state": steady,
+            "live_upgrade": live,
+        })
+        return rows
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+        shutil.rmtree(live_root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    args = ap.parse_args()
+    common.emit(run(args.preset),
+                "Execution-plan resolution pipeline — overhead + live upgrades")

@@ -20,6 +20,7 @@ def main() -> None:
         bench_kernel_matrix,
         bench_pool,
         bench_resnet,
+        bench_resolution,
         bench_roofline,
         bench_runner_cache,
         bench_seqlen,
@@ -40,6 +41,7 @@ def main() -> None:
         ("MeasureRunner cached/pruned backends", bench_runner_cache),
         ("Schedule-registry service cold-start stream", bench_service),
         ("§5.3 server-vs-edge multi-target", bench_targets),
+        ("Execution-plan resolution pipeline", bench_resolution),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

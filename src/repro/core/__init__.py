@@ -10,6 +10,7 @@ Public API:
     transfer_tune / transfer_matrix / cross_target_transfer  transfer.py
     select_donor / top_donors (Eq. 1) ...................... heuristic.py
     extract_kernels (model config -> kernel workloads) ..... extract.py
+    ResolutionPipeline / ExecutionPlan / plan_model ........ resolution.py
     Target / get_target / resolve_target ................... repro.targets
 """
 from repro.core.autoscheduler import ModelTuneResult, TuneResult, tune_kernel, tune_model, tune_model_into_db
@@ -24,6 +25,18 @@ from repro.core.cost_model import (
 )
 from repro.core.database import Record, ScheduleDB
 from repro.core.heuristic import DonorScore, donor_scores, select_donor, top_donors
+from repro.core.resolution import (
+    DefaultStage,
+    ExecutionPlan,
+    Resolution,
+    ResolutionPipeline,
+    ResolutionStage,
+    ServiceStage,
+    StaticMapStage,
+    plan_model,
+    plan_serving,
+    plan_uses,
+)
 from repro.core.runner import (
     AnalyticalRunner,
     CachedRunner,
@@ -50,11 +63,18 @@ __all__ = [
     "CachedRunner",
     "ConcreteSchedule",
     "CostBreakdown",
+    "DefaultStage",
     "DonorScore",
+    "ExecutionPlan",
     "Target",
     "MeasureRunner",
     "PruningRunner",
+    "Resolution",
+    "ResolutionPipeline",
+    "ResolutionStage",
     "RunnerStats",
+    "ServiceStage",
+    "StaticMapStage",
     "KernelInstance",
     "KernelTransfer",
     "KernelUse",
@@ -81,6 +101,9 @@ __all__ = [
     "list_targets",
     "measure",
     "model_seconds",
+    "plan_model",
+    "plan_serving",
+    "plan_uses",
     "resolve_target",
     "select_donor",
     "top_donors",

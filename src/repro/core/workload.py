@@ -132,12 +132,19 @@ class KernelInstance:
         return class_family(self.class_id)
 
     def workload_key(self) -> str:
-        """Ansor-style unique ID: hash of class + shape params + dtype."""
-        blob = json.dumps(
-            {"class": self.class_id, "params": list(self.params), "dtype": self.dtype},
-            sort_keys=True,
-        )
-        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+        """Ansor-style unique ID: hash of class + shape params + dtype.
+
+        Memoized on the instance — resolution paths key every lookup by it,
+        so the hash is computed once per interned instance, not per call."""
+        key = self.__dict__.get("_workload_key")
+        if key is None:
+            blob = json.dumps(
+                {"class": self.class_id, "params": list(self.params), "dtype": self.dtype},
+                sort_keys=True,
+            )
+            key = hashlib.sha1(blob.encode()).hexdigest()[:16]
+            object.__setattr__(self, "_workload_key", key)
+        return key
 
     def to_json(self) -> dict:
         return {"class_id": self.class_id, "params": list(self.params), "dtype": self.dtype}

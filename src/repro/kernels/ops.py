@@ -10,21 +10,31 @@ transfer-tuned) plumb into execution as a first-class feature:
   :class:`ConcreteSchedule` as BlockSpecs.  On CPU this runs in interpret
   mode (functionally exact, used by the tests); on TPU it compiles.
 
-Schedule resolution: a :class:`ScheduleProvider` built from a tuned
-:class:`~repro.core.database.ScheduleDB` / transfer-tuning result maps each
-runtime kernel instance to its best schedule (exact workload hit → class
-transfer → untuned default), mirroring the lookup order of the paper.
+Schedule resolution is the :class:`~repro.core.resolution.ResolutionPipeline`
+(service → static map → default) behind a :class:`ScheduleProvider` facade.
+When an :class:`~repro.core.resolution.ExecutionPlan` is active (serving),
+the pre-resolved plan is consulted first — a lock-free dict hit — and only
+unplanned instances walk the pipeline (whose memo cache makes the steady
+state a dict hit as well).
+
+The per-op hot path is kept cheap: the interpret-mode backend probe runs
+once per process, and kernel instances are interned so repeated calls with
+the same shapes reuse one validated :class:`KernelInstance` (and its cached
+workload key) instead of rebuilding it.
 """
 from __future__ import annotations
 
 import contextlib
+import functools
 import threading
 from typing import Mapping
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import ConcreteSchedule, Schedule, ScheduleInvalid, concretize, default_schedule
+from repro.core import resolution
+from repro.core.resolution import ExecutionPlan, ResolutionPipeline
+from repro.core.schedule import ConcreteSchedule, Schedule
 from repro.core.workload import KernelInstance
 from repro.kernels import flash_attention as _fa
 from repro.kernels import matmul as _mm
@@ -57,50 +67,96 @@ def use_backend(backend: str):
 class ScheduleProvider:
     """Resolves the schedule for each kernel instance the model emits.
 
-    Two sources, either or both may be set:
+    A thin facade over a :class:`ResolutionPipeline` plus an optional active
+    :class:`ExecutionPlan`:
 
-    * ``schedule_map``: workload_key -> Schedule (e.g. from
-      TransferResult.schedule_map() or native tuning records) — a frozen,
-      offline-produced mapping;
-    * ``service``: a :class:`repro.service.TuningService` — the online path.
-      Each resolution goes through the service's tiered lookup (exact →
-      transfer probe → default), and misses enqueue background tuning jobs,
-      so repeated resolutions upgrade as jobs publish to the registry.
+    * ``plan`` (when set) answers first — pre-resolved dict hit;
+    * the pipeline walks service → static map → default on plan misses and
+      memoizes per ``(workload, mode, target, generation)``.
 
-    Lookup order: service (when set) → static map → untuned default.  Invalid
-    entries (e.g. a transferred schedule that does not concretize strictly)
-    fall back to the default — execution never fails on a bad DB.
+    Construct either from the legacy pieces (``schedule_map`` and/or
+    ``service``) or from an explicit ``pipeline``.  Invalid entries (e.g. a
+    transferred schedule that does not concretize strictly) fall through to
+    the next stage — execution never fails on a bad DB.
+
+    Per-tier lookup counts (``exact``/``transfer``/``static``/``default``)
+    live in the pipeline and are thread-safe; a service answer of the
+    untuned-default tier is *not* a hit.  ``hits``/``misses`` remain as
+    derived compatibility properties.
     """
 
     def __init__(self, schedule_map: Mapping[str, Schedule] | None = None,
-                 mode: str = "strict", service=None):
-        self.schedule_map = dict(schedule_map or {})
-        self.mode = mode
-        self.service = service
-        self.hits = 0
-        self.misses = 0
+                 mode: str = "strict", service=None, *,
+                 pipeline: ResolutionPipeline | None = None,
+                 plan: ExecutionPlan | None = None, target=None):
+        if pipeline is None:
+            pipeline = ResolutionPipeline.build(
+                schedule_map=schedule_map, service=service, mode=mode,
+                target=target)
+        self.pipeline = pipeline
+        self.plan = plan
+        self._lock = threading.Lock()
+        # Plan answers bucketed by tier (a default-tier plan entry is still
+        # an untuned kernel — it must not masquerade as a hit), plus misses
+        # (instances the plan does not cover, served by the pipeline) so
+        # coverage gaps are observable.
+        self._plan_served = {t: 0 for t in resolution.TIERS}
+        self._plan_misses = 0
 
-    def _try(self, sched: Schedule | None, instance: KernelInstance
-             ) -> ConcreteSchedule | None:
-        if sched is None:
-            return None
-        try:
-            return concretize(sched, instance, mode=self.mode)
-        except ScheduleInvalid:
-            return None
+    @property
+    def mode(self) -> str:
+        return self.pipeline.mode
+
+    @property
+    def service(self):
+        return self.pipeline.service
+
+    @property
+    def schedule_map(self) -> dict[str, Schedule]:
+        return self.pipeline.schedule_map
 
     def get(self, instance: KernelInstance) -> ConcreteSchedule:
-        if self.service is not None:
-            cs = self._try(self.service.lookup(instance).schedule, instance)
-            if cs is not None:
-                self.hits += 1
-                return cs
-        cs = self._try(self.schedule_map.get(instance.workload_key()), instance)
-        if cs is not None:
-            self.hits += 1
-            return cs
-        self.misses += 1
-        return concretize(default_schedule(instance), instance)
+        plan = self.plan
+        if plan is not None:
+            r = plan.lookup(instance)
+            if r is not None:
+                with self._lock:
+                    self._plan_served[r.tier] += 1
+                return r.concrete
+            with self._lock:
+                self._plan_misses += 1
+        return self.pipeline.resolve(instance).concrete
+
+    # -- telemetry ------------------------------------------------------------
+    @property
+    def plan_hits(self) -> int:
+        """Total resolutions the active plan answered (any tier)."""
+        with self._lock:
+            return sum(self._plan_served.values())
+
+    def stats(self) -> dict:
+        out = self.pipeline.stats()
+        with self._lock:
+            out["plan_served"] = dict(self._plan_served)
+            out["plan_misses"] = self._plan_misses
+        out["plan_hits"] = sum(out["plan_served"].values())
+        out["plan_entries"] = len(self.plan) if self.plan is not None else 0
+        out["plan_generation"] = (self.plan.generation
+                                  if self.plan is not None else None)
+        return out
+
+    # Legacy counters: tuned-tier resolutions count as hits, untuned as
+    # misses (regardless of whether the plan or the pipeline served them).
+    @property
+    def hits(self) -> int:
+        s = self.stats()
+        return sum(s["plan_served"][t] + s[f"served_{t}"]
+                   for t in ("exact", "transfer", "static"))
+
+    @property
+    def misses(self) -> int:
+        s = self.stats()
+        return s["plan_served"]["default"] + s["served_default"]
 
 
 _DEFAULT_PROVIDER = ScheduleProvider()
@@ -119,6 +175,46 @@ def set_default_provider(provider: ScheduleProvider | None) -> ScheduleProvider:
 
 def _resolve(provider: ScheduleProvider | None) -> ScheduleProvider:
     return provider if provider is not None else _DEFAULT_PROVIDER
+
+
+# ---------------------------------------------------------------------------
+# Per-op hot-path helpers: interned instances, hoisted backend probe
+# ---------------------------------------------------------------------------
+
+_DTYPE_STR: dict = {}
+
+
+def _dtype_str(dt) -> str:
+    s = _DTYPE_STR.get(dt)
+    if s is None:
+        s = _DTYPE_STR[dt] = str(dt)
+    return s
+
+
+@functools.lru_cache(maxsize=8192)
+def _interned(class_id: str, dtype: str,
+              params: tuple[tuple[str, int], ...]) -> KernelInstance:
+    return KernelInstance(class_id=class_id, params=params, dtype=dtype)
+
+
+def _instance(class_id: str, dtype, **params: int) -> KernelInstance:
+    """Interned KernelInstance.make: validation + workload key amortized."""
+    return _interned(class_id, _dtype_str(dtype),
+                     tuple(sorted((k, int(v)) for k, v in params.items())))
+
+
+_INTERPRET: bool | None = None
+
+
+def _interpret() -> bool:
+    """Pallas interpret mode: on unless a real TPU backend is present.
+
+    The backend probe is process-wide and stable, so it runs once instead of
+    on every op call."""
+    global _INTERPRET
+    if _INTERPRET is None:
+        _INTERPRET = jax.default_backend() != "tpu"
+    return _INTERPRET
 
 
 # ---------------------------------------------------------------------------
@@ -141,7 +237,7 @@ def matmul(x: jax.Array, w: jax.Array, *, class_id: str = "matmul",
         m *= s
     x2 = x.reshape(m, k)
     res2 = residual.reshape(m, -1) if residual is not None else None
-    inst = KernelInstance.make(class_id, M=m, N=n, K=k, dtype=str(x.dtype))
+    inst = _instance(class_id, x.dtype, M=m, N=n, K=k)
     cs = _resolve(provider).get(inst)
     y = _mm.matmul(x2, w, cs, class_id=class_id, bias=bias, residual=res2,
                    softcap=softcap, interpret=_interpret())
@@ -157,7 +253,7 @@ def moe_gemm(x: jax.Array, w: jax.Array, *, class_id: str = "moe_gemm",
         return jax.vmap(lambda a, b: ref.matmul(a, b, class_id))(x, w)
     e, m, k = x.shape
     n = w.shape[2]
-    inst = KernelInstance.make(class_id, M=m * e, N=n, K=k, E=e, dtype=str(x.dtype))
+    inst = _instance(class_id, x.dtype, M=m * e, N=n, K=k, E=e)
     cs = _resolve(provider).get(inst)
     return _mm.grouped_matmul(x, w, cs, class_id=class_id, interpret=_interpret())
 
@@ -178,8 +274,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         return ref.chunked_attention(q, k, v, causal=causal, window=window,
                                      softcap=softcap, q_offset=q_offset, chunk=chunk)
     b, hq, sq, d = q.shape
-    inst = KernelInstance.make(class_id, Q=sq, KV=k.shape[2], H=hq, D=d, B=b,
-                               window=window, dtype=str(q.dtype))
+    inst = _instance(class_id, q.dtype, Q=sq, KV=k.shape[2], H=hq, D=d, B=b,
+                     window=window)
     cs = _resolve(provider).get(inst)
     return _fa.flash_attention(q, k, v, cs, causal=causal, window=window,
                                softcap=softcap, q_offset=q_offset,
@@ -198,7 +294,7 @@ def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
     if backend == "ref":
         return ref.rwkv6_scan(r, k, v, w, u, state)
     b, h, t, d = r.shape
-    inst = KernelInstance.make("rwkv6_scan", T=t, C=h * d, D=d, B=b, dtype=str(r.dtype))
+    inst = _instance("rwkv6_scan", r.dtype, T=t, C=h * d, D=d, B=b)
     cs = _resolve(provider).get(inst)
     return _rw.rwkv6_scan(r, k, v, w, u, state, cs, interpret=_interpret())
 
@@ -210,11 +306,6 @@ def rglru(x: jax.Array, a: jax.Array, state: jax.Array, *,
     if backend == "ref":
         return ref.rglru_scan(x, a, state)
     b, t, c = x.shape
-    inst = KernelInstance.make("rglru_scan", T=t, C=c, B=b, dtype=str(x.dtype))
+    inst = _instance("rglru_scan", x.dtype, T=t, C=c, B=b)
     cs = _resolve(provider).get(inst)
     return _rg.rglru_scan(x, a, state, cs, interpret=_interpret())
-
-
-def _interpret() -> bool:
-    """Pallas interpret mode: on unless a real TPU backend is present."""
-    return jax.default_backend() != "tpu"

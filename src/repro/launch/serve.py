@@ -15,6 +15,14 @@ Schedule resolution is pluggable:
   result JSON.  ``--tuning-workers 0`` defers jobs (drained at exit);
   the provider only affects the ``pallas`` backend (``--backend``).
 
+Either way resolution runs through the staged
+:class:`~repro.core.resolution.ResolutionPipeline` and the engine holds a
+pre-resolved :class:`~repro.core.resolution.ExecutionPlan` for its serving
+shapes: steady-state kernel calls are plan/cache dict hits, and when a
+background job publishes an upgrade the engine re-plans at a decode-step
+boundary — the result JSON reports per-tier resolution counts, plan tier
+composition, and re-plan count.
+
 ``--target`` selects the hardware namespace served (schedules tuned for one
 chip never silently serve another); ``--tuning-donor-target`` optionally
 draws transfer donors from a different chip's namespace (explicit
@@ -97,8 +105,13 @@ def main(argv=None) -> dict:
     if cfg.vision_tokens:
         extras["patch_embeds"] = np.zeros((cfg.vision_tokens, cfg.d_model), np.float32)
 
-    engine = ServingEngine(model, params, slots=args.slots, max_len=args.max_len,
-                           extras=extras)
+    # The provider (and hence plan construction, which runs service lookups
+    # and enqueues background tuning) is wired in only for the pallas
+    # backend: ref-backend ops never consult schedules, and planning for
+    # them would spend tuning budget on kernels that never execute.
+    engine = ServingEngine(
+        model, params, slots=args.slots, max_len=args.max_len, extras=extras,
+        provider=provider if args.backend == "pallas" else None)
     rng = np.random.default_rng(0)
     pending = [list(rng.integers(1, cfg.vocab_size, size=int(rng.integers(3, 9))))
                for _ in range(args.requests)]
@@ -127,7 +140,14 @@ def main(argv=None) -> dict:
     result = {"requests": len(done), "decode_steps": steps,
               "tokens": toks, "tok_per_s": round(toks / dt, 1),
               "target": args.target,
-              "schedule_hits": provider.hits, "schedule_misses": provider.misses}
+              "schedule_hits": provider.hits, "schedule_misses": provider.misses,
+              "resolution": provider.stats(),
+              "replans": engine.replans,
+              "prefill_traces": engine.prefill_trace_count}
+    if engine.plan is not None:
+        result["plan"] = {"entries": len(engine.plan),
+                          "generation": engine.plan.generation,
+                          "tiers": engine.plan.tier_counts()}
     if service is not None:
         result["tuning_service"] = service.stats()
     print(json.dumps(result))

@@ -161,7 +161,9 @@ def loss_fn(params: dict, cfg: ArchConfig, batch: dict, *, remat: bool = True,
 
 
 def prefill(params: dict, cfg: ArchConfig, batch: dict, *, max_len: int,
-            provider=None) -> tuple[jax.Array, dict]:
+            provider=None, true_len=None) -> tuple[jax.Array, dict]:
+    """``true_len``: number of real decoder tokens when the prompt is
+    right-padded to a trace bucket (see :func:`repro.models.lm.prefill`)."""
     enc = encode(params, cfg, batch["frames"], remat=False, provider=provider)
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -182,9 +184,15 @@ def prefill(params: dict, cfg: ArchConfig, batch: dict, *, max_len: int,
         return constrain(hh), {"self": c, "cross_k": ck, "cross_v": cv}
 
     h, caches = jax.lax.scan(body, h, params["decoder"])
-    h = apply_norm(params["final_norm"], h[:, -1:, :], cfg.norm)
+    if true_len is None:
+        t = jnp.asarray(s, jnp.int32)
+        h_last = h[:, -1:, :]
+    else:
+        t = jnp.asarray(true_len, jnp.int32)
+        h_last = jax.lax.dynamic_slice_in_dim(h, t - 1, 1, axis=1)
+    h = apply_norm(params["final_norm"], h_last, cfg.norm)
     logits = ops.matmul(h, params["lm_head"], class_id="matmul_lmhead", provider=provider)
-    return logits[:, 0, :], {"layers": caches, "t": jnp.full((b,), s, jnp.int32)}
+    return logits[:, 0, :], {"layers": caches, "t": jnp.full((b,), t, jnp.int32)}
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:

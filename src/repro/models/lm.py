@@ -263,8 +263,15 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
 
 
 def prefill(params: dict, cfg: ArchConfig, batch: dict, *, max_len: int,
-            provider=None) -> tuple[jax.Array, dict]:
-    """Process the prompt; returns (last-position logits, cache)."""
+            provider=None, true_len=None) -> tuple[jax.Array, dict]:
+    """Process the prompt; returns (last-position logits, cache).
+
+    ``true_len`` (static or traced int) marks the number of *real* text
+    tokens when the prompt is right-padded to a trace bucket: logits come
+    from the last real position and the cache's decode position starts
+    there.  Right padding is inert for causal attention (real positions
+    never attend to pads; pad cache rows sit beyond the decode position and
+    are overwritten before they become visible)."""
     tokens = batch["tokens"]
     h = _embed(params, cfg, tokens)
     if cfg.vision_tokens:
@@ -276,8 +283,14 @@ def prefill(params: dict, cfg: ArchConfig, batch: dict, *, max_len: int,
     caches = init_cache(cfg, b, max_len)
     h, new_caches, _ = _stack_pass(params, cfg, h, positions=positions,
                                    caches=caches, remat=False, provider=provider)
-    new_caches["t"] = jnp.full((b,), s, jnp.int32)
-    h_last = apply_norm(params["final_norm"], h[:, -1:, :], cfg.norm)
+    if true_len is None:
+        t = jnp.asarray(s, jnp.int32)
+        h_last = h[:, -1:, :]
+    else:
+        t = jnp.asarray(true_len, jnp.int32) + cfg.vision_tokens
+        h_last = jax.lax.dynamic_slice_in_dim(h, t - 1, 1, axis=1)
+    new_caches["t"] = jnp.full((b,), t, jnp.int32)
+    h_last = apply_norm(params["final_norm"], h_last, cfg.norm)
     logits = _lm_head(params, cfg, h_last, provider=provider)
     return logits[:, 0, :], new_caches
 

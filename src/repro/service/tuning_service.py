@@ -113,6 +113,9 @@ class TuningService:
         self._attempted: set[str] = set()
         self._spent_s = 0.0
         self._probe_s = 0.0
+        # Publish log for changed-workload notification: (generation before,
+        # generation after, workload key) per publish this service performed.
+        self._pub_events: list[tuple[int, int, str]] = []
         self._counters = {
             "lookups": 0, "exact_hits": 0, "transfer_hits": 0,
             "default_misses": 0, "jobs_enqueued": 0, "jobs_deduped": 0,
@@ -265,13 +268,60 @@ class TuningService:
                 with self._lock:
                     self._counters["publish_skipped"] += 1
                 return False
-            self.registry.publish(
+            gen_before = self.registry.generation
+            comp_before = getattr(self.registry, "compactions", 0)
+            gen_after = self.registry.publish(
                 [Record(instance=instance, schedule=schedule, seconds=seconds,
                         model_id=self.model_id, target=self.target)],
                 mode=self.mode)
+            comp_delta = getattr(self.registry, "compactions", 0) - comp_before
+            # gen_after may exceed gen_before + 1: auto-compaction inside
+            # publish (keeps the best record per workload — attributable to
+            # this key) or *another process's* publishes folded in when our
+            # snapshot was stale (NOT attributable: those may change any
+            # workload's answer).  A span wider than 1 + compactions poisons
+            # the event (key None -> changed_since reports unknown).
+            key = (instance.workload_key()
+                   if gen_after == gen_before + 1 + comp_delta else None)
             with self._lock:
                 self._counters["upgrades"] += 1
+                self._pub_events.append((gen_before, gen_after, key))
+                del self._pub_events[:-512]
             return True
+
+    # -- generation / change notification -------------------------------------
+    def generation(self) -> int:
+        """Registry generation visible to this service's lookups."""
+        return self.registry.generation
+
+    def changed_since(self, generation: int) -> set[str] | None:
+        """Workload keys whose published best may have changed since
+        ``generation``.
+
+        Returns ``None`` when the generation bumps since then cannot all be
+        attributed to this service's own publishes (another writer touched
+        the registry, or the publish log was trimmed) — callers must then
+        assume anything changed.  Resolution pipelines use this to migrate
+        memoized entries across generations instead of re-resolving every
+        workload after each background upgrade.
+        """
+        current = self.registry.generation
+        if generation >= current:
+            return set()
+        with self._lock:
+            events = sorted((e for e in self._pub_events if e[1] > generation),
+                            key=lambda e: (e[0], e[1]))
+        g = generation
+        changed: set[str] = set()
+        for g_before, g_after, key in events:
+            if g_before > g:
+                return None  # gap: a publish we did not perform
+            if g_after > g:
+                if key is None:
+                    return None  # poisoned: external publishes folded in
+                changed.add(key)
+                g = g_after
+        return changed if g == current else None
 
     def drain(self, max_jobs: int | None = None, timeout: float | None = None) -> int:
         """Complete queued background work; returns jobs finished.

@@ -7,6 +7,26 @@ New requests are prefilled (batch=1) into a free slot by splicing that
 slot's rows of every cache leaf; finished sequences (EOS / max-tokens) free
 their slot immediately, keeping the decode batch dense.
 
+Two serving-cost refinements live here:
+
+* **Execution plans** — when constructed with a plan-capable
+  :class:`~repro.kernels.ops.ScheduleProvider`, the engine pre-resolves its
+  kernel set into an :class:`~repro.core.resolution.ExecutionPlan`
+  (:func:`plan_serving`) and checks the resolution pipeline's generation
+  *between* decode steps: when background tuning publishes an upgrade, the
+  engine re-plans and re-traces at the step boundary — never mid-step — so
+  schedules published to a live registry reach a running server without a
+  restart.  ``plan_history`` records the (step, generation) transition
+  points; ``replans`` counts swaps.
+* **Prefill buckets** — prompts are padded (right, causal-safe) to
+  power-of-two length buckets so the prefill trace count is O(log max_len)
+  instead of one per distinct prompt length.  The model is told the true
+  length (``true_len``) so logits and cache positions are exact.  Bucketing
+  is enabled only where padding is provably inert: attention-only stacks
+  (a recurrent scan would fold pad steps into its state) and pad lengths
+  that fit the smallest KV cache (a ring/SWA cache would wrap pad rows over
+  real ones); everything else falls back to exact-length prefill.
+
 This is the TPU-idiomatic shape of continuous batching for fixed-size
 caches; ring buffers (windowed layers) and recurrent states come from the
 model substrate unchanged.
@@ -20,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.resolution import ExecutionPlan, plan_serving
 from repro.models.build import Model
 
 
@@ -35,7 +56,9 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model: Model, params: Any, *, slots: int, max_len: int,
-                 extras: dict | None = None):
+                 extras: dict | None = None, provider=None,
+                 plan: ExecutionPlan | None = None,
+                 prefill_buckets: bool = True):
         self.model = model
         self.params = params
         self.slots = slots
@@ -45,7 +68,79 @@ class ServingEngine:
         self.active: dict[int, Request] = {}
         self.last_logits = None   # (slots, vocab) from the latest decode step
         self._uid = 0
-        self._decode = jax.jit(model.decode_step)
+
+        cfg = model.cfg
+        kinds = set(cfg.layer_kinds)
+        self.prefill_buckets = (prefill_buckets and cfg.family != "audio"
+                                and "R" not in kinds)
+        # Largest pad length that cannot corrupt a cache: the ring (windowed)
+        # caches hold min(window, max_len) positions and wrap beyond that.
+        self._bucket_cap = (max_len if (cfg.window == 0 or "L" not in kinds)
+                            else min(cfg.window, max_len))
+        self._prefill_lengths: set[int] = set()  # distinct padded lengths traced
+
+        # Execution plan: pre-resolve the decode batch + prefill buckets.
+        self.provider = provider
+        self.plan = plan
+        self.replans = 0
+        # (step, plan generation) at each plan *transition* (first step and
+        # every swap) — bounded by the number of re-plans, not the number of
+        # decode steps, so a long-lived server never accumulates history.
+        self.plan_history: list[tuple[int, int]] = []
+        self._steps = 0
+        if provider is not None and getattr(provider, "pipeline", None) is not None:
+            if self.plan is None:
+                self.plan = plan_serving(
+                    cfg, provider.pipeline, slots=slots, max_len=max_len,
+                    prefill_lengths=self._bucket_lengths())
+            provider.plan = self.plan
+        self._make_fns()
+
+    # -- tracing --------------------------------------------------------------
+    def _make_fns(self) -> None:
+        """(Re)build the jitted entry points.
+
+        Called at init and after every re-plan: schedules are resolved at
+        trace time, so a plan swap must drop stale traces to take effect.
+        """
+        model, provider, max_len = self.model, self.provider, self.max_len
+
+        def prefill_fn(params, batch, true_len):
+            return model.prefill(params, batch, max_len=max_len,
+                                 true_len=true_len, provider=provider)
+
+        def decode_fn(params, cache, toks):
+            return model.decode_step(params, cache, toks, provider=provider)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+
+    # -- prefill buckets -------------------------------------------------------
+    def _pad_len(self, n: int) -> int:
+        """Power-of-two bucket for a prompt of n tokens (n itself when
+        bucketing is off or the bucket would overflow the smallest cache)."""
+        if not self.prefill_buckets or n >= self._bucket_cap:
+            return n
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self._bucket_cap)
+
+    def _bucket_lengths(self) -> list[int]:
+        """Every pad length prefill can be traced at (for plan coverage)."""
+        if not self.prefill_buckets:
+            return []
+        out, b = [], 1
+        while b < self._bucket_cap:
+            out.append(b)
+            b *= 2
+        out.append(self._bucket_cap)
+        return out
+
+    @property
+    def prefill_trace_count(self) -> int:
+        """Distinct prefill shapes traced so far (bounded by the buckets)."""
+        return len(self._prefill_lengths)
 
     # -- request admission ---------------------------------------------------
     def add_request(self, prompt: list[int], max_new_tokens: int = 16,
@@ -57,10 +152,15 @@ class ServingEngine:
         slot = free[0]
         self._uid += 1
         req = Request(self._uid, list(prompt), max_new_tokens, eos_id)
-        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+        n = len(req.prompt)
+        pad = self._pad_len(n)
+        self._prefill_lengths.add(pad)
+        toks = req.prompt + [0] * (pad - n)
+        batch = {"tokens": jnp.asarray([toks], jnp.int32)}
         for k, v in self.extras.items():
             batch[k] = v[None] if v.ndim == 2 else v  # (1, ..., D) stub inputs
-        logits, cache1 = self.model.prefill(self.params, batch, max_len=self.max_len)
+        logits, cache1 = self._prefill(self.params, batch,
+                                       jnp.asarray(n, jnp.int32))
         req.generated.append(int(jnp.argmax(logits[0])))
         self.cache = jax.tree_util.tree_map(
             lambda full, one: _splice_slot(full, one, slot), self.cache, cache1
@@ -69,10 +169,31 @@ class ServingEngine:
         return req
 
     # -- decode ----------------------------------------------------------------
+    def _maybe_replan(self) -> None:
+        """Swap in a fresh plan when background tuning moved the generation.
+
+        Only ever called at a step boundary: a plan (and its traces) is
+        immutable for the duration of one decode step.
+        """
+        if self.plan is None or self.provider is None:
+            return
+        if self.provider.pipeline.generation() == self.plan.generation:
+            return
+        self.plan = self.plan.refresh(self.provider.pipeline)
+        self.provider.plan = self.plan
+        self.replans += 1
+        self._make_fns()
+
     def step(self) -> list[Request]:
         """One batched decode step for all active slots; returns finished."""
+        self._maybe_replan()
         if not self.active:
             return []
+        self._steps += 1
+        if self.plan is not None and (
+                not self.plan_history
+                or self.plan_history[-1][1] != self.plan.generation):
+            self.plan_history.append((self._steps, self.plan.generation))
         toks = np.zeros(self.slots, np.int32)
         for slot, req in self.active.items():
             toks[slot] = req.generated[-1]

@@ -77,6 +77,97 @@ def test_eos_stops_early(small_lm):
     assert len(r.generated) <= 31
 
 
+def test_prefill_buckets_bound_traces_and_preserve_output(small_lm):
+    """Prompts of many distinct lengths share O(log max_len) prefill traces,
+    and right-padding + true_len is exact: same tokens as unbucketed."""
+    cfg, model, params = small_lm
+    for prompt in ([1, 2, 3], [9, 10, 11, 12, 13], [4] * 7):
+        bucketed = ServingEngine(model, params, slots=1, max_len=32)
+        exact = ServingEngine(model, params, slots=1, max_len=32,
+                              prefill_buckets=False)
+        rb = bucketed.add_request(list(prompt), max_new_tokens=3)
+        re_ = exact.add_request(list(prompt), max_new_tokens=3)
+        bucketed.step()
+        exact.step()
+        np.testing.assert_allclose(np.asarray(bucketed.last_logits)[0],
+                                   np.asarray(exact.last_logits)[0],
+                                   rtol=1e-5, atol=1e-5)
+        bucketed.run_to_completion()
+        exact.run_to_completion()
+        assert rb.generated == re_.generated
+
+    eng = ServingEngine(model, params, slots=1, max_len=32)
+    for n in range(1, 9):  # 8 distinct prompt lengths -> buckets {1,2,4,8}
+        r = eng.add_request(list(range(1, n + 1)), max_new_tokens=1)
+        eng.run_to_completion()
+        assert r.done
+    assert eng.prefill_trace_count <= 4
+
+
+def test_recurrent_arch_skips_bucketing():
+    """Padding a recurrent scan would fold pad steps into the state — the
+    engine must fall back to exact-length prefill for R-layer archs."""
+    cfg = reduced(get_arch("recurrentgemma-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, slots=1, max_len=32)
+    assert not eng.prefill_buckets
+    r = eng.add_request([1, 2, 3], max_new_tokens=3)
+    eng.run_to_completion()
+    assert r.done
+
+
+def test_plan_replans_at_step_boundary_and_serves_upgrade(small_lm, tmp_path):
+    """A schedule published mid-serve reaches the live engine: the plan is
+    swapped at a decode-step boundary (never mid-step) and the upgraded
+    schedule becomes the plan's exact-tier entry."""
+    import dataclasses
+
+    from repro.core.database import Record
+    from repro.core.schedule import default_schedule
+    from repro.kernels.ops import ScheduleProvider
+    from repro.service import ScheduleRegistry, TuningService
+
+    cfg, model, params = small_lm
+    registry = ScheduleRegistry(str(tmp_path / "reg"))
+    service = TuningService(registry, model_id="serve", max_workers=0,
+                            probe_candidates=0)
+    provider = ScheduleProvider(service=service)
+    eng = ServingEngine(model, params, slots=2, max_len=32, provider=provider)
+    assert eng.plan is not None and len(eng.plan) > 0
+
+    eng.add_request([1, 2, 3], max_new_tokens=8)
+    eng.add_request([4, 5, 6, 7], max_new_tokens=8)
+    eng.step()
+    eng.step()
+    g0 = eng.plan.generation
+    assert eng.replans == 0
+
+    inst = next(u.instance for u in eng.plan.uses
+                if u.instance.class_id == "matmul")
+    assert eng.plan.lookup(inst).tier == "default"
+    upgraded = dataclasses.replace(default_schedule(inst), unroll=4,
+                                   source="background")
+    registry.publish([Record(instance=inst, schedule=upgraded,
+                             seconds=service.runner.seconds(inst, upgraded),
+                             model_id="background", target=service.target)])
+    # nothing swaps until the next step boundary
+    assert eng.plan.generation == g0
+
+    eng.run_to_completion()
+    assert eng.replans == 1
+    entry = eng.plan.lookup(inst)
+    assert entry.tier == "exact" and entry.schedule == upgraded
+    assert not eng.active  # the stream kept serving through the swap
+
+    gens = [g for _, g in eng.plan_history]
+    # plan_history records transition points: one generation at the start,
+    # one swap, monotone — the upgrade landed at a boundary, never mid-step
+    assert gens == sorted(gens)
+    assert gens[0] == g0 and gens[-1] > g0
+    assert len(gens) == len(set(gens)) == 2
+
+
 def test_windowed_arch_serving():
     cfg = reduced(get_arch("mixtral-8x22b"))  # SWA ring caches
     model = build_model(cfg)
