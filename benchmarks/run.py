@@ -13,6 +13,7 @@ from benchmarks import common
 
 def main() -> None:
     from benchmarks import (
+        bench_fleet,
         bench_full_tuning,
         bench_gemm_transfer,
         bench_headline,
@@ -42,6 +43,7 @@ def main() -> None:
         ("Schedule-registry service cold-start stream", bench_service),
         ("§5.3 server-vs-edge multi-target", bench_targets),
         ("Execution-plan resolution pipeline", bench_resolution),
+        ("Serving fleet: router + demand-driven tuning", bench_fleet),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

@@ -30,7 +30,8 @@ def drive(arch: str, n_requests: int = 10, slots: int = 4):
     t0 = time.monotonic()
     steps = 0
     while pending or engine.active:
-        while pending and engine.add_request(pending[0], max_new_tokens=int(rng.integers(4, 12))):
+        while pending and engine.free_slots:
+            engine.add_request(pending[0], max_new_tokens=int(rng.integers(4, 12)))
             pending.pop(0)
         done.extend(engine.step())
         steps += 1

@@ -1,0 +1,45 @@
+"""Serving-fleet subsystem.
+
+A request front-end over N :class:`~repro.serving.ServingEngine` replicas:
+
+    traffic.py ..... seeded synthetic request streams (Poisson, mixed shapes)
+    router.py ...... bounded admission queue + pluggable dispatch policies
+    demand.py ...... per-bucket arrival counts driving demand-driven tuning
+    metrics.py ..... latency percentiles, throughput, queue/shed telemetry
+    fleet.py ....... replicas + shared-registry propagation + the serve loop
+"""
+from repro.fleet.demand import DemandTracker
+from repro.fleet.fleet import Replica, ServingFleet
+from repro.fleet.metrics import FleetMetrics, percentile
+from repro.fleet.router import (
+    POLICIES,
+    DispatchPolicy,
+    LeastLoaded,
+    PlanAware,
+    QueueFull,
+    RequestRouter,
+    RoundRobin,
+    make_policy,
+    register_policy,
+)
+from repro.fleet.traffic import FleetRequest, TrafficGenerator, sample_prompts
+
+__all__ = [
+    "DemandTracker",
+    "DispatchPolicy",
+    "FleetMetrics",
+    "FleetRequest",
+    "LeastLoaded",
+    "POLICIES",
+    "PlanAware",
+    "QueueFull",
+    "Replica",
+    "RequestRouter",
+    "RoundRobin",
+    "ServingFleet",
+    "TrafficGenerator",
+    "make_policy",
+    "percentile",
+    "register_policy",
+    "sample_prompts",
+]

@@ -1,0 +1,57 @@
+"""Demand tracking: per-(prefill-bucket) arrival counts drive tuning order.
+
+The paper's economics are about *where to spend search*: transfer-tuning
+makes each tuned schedule cheap, but a fleet still has a bounded background
+tuning budget, so the order in which shapes graduate default → transfer →
+exact matters.  :class:`DemandTracker` aggregates what the router actually
+sees — arrival counts keyed by prefill bucket — and ranks buckets hottest
+first, so the fleet can prefetch tuning jobs for the shapes traffic is
+hitting *now* while cold shapes never spend budget.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable
+
+from repro.fleet.traffic import FleetRequest
+
+
+class DemandTracker:
+    """Arrival counts per workload bucket (prefill bucket length).
+
+    ``bucket_for`` maps a prompt length to its bucket — normally the
+    reference replica's :meth:`~repro.serving.ServingEngine.bucket_for`, so
+    demand is keyed exactly the way the engines pad and the plans resolve.
+    Without one, the raw prompt length is the bucket.
+    """
+
+    def __init__(self, bucket_for: "Callable[[int], int] | None" = None):
+        self.bucket_for = bucket_for
+        self.counts: collections.Counter[int] = collections.Counter()
+
+    def record(self, req: FleetRequest) -> int:
+        """Count one arrival; stamps and returns the request's bucket."""
+        n = len(req.prompt)
+        bucket = self.bucket_for(n) if self.bucket_for is not None else n
+        req.bucket = bucket
+        self.counts[bucket] += 1
+        return bucket
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def hottest(self) -> list[tuple[int, int]]:
+        """(bucket, count) pairs, hottest first (ties: smaller bucket)."""
+        return sorted(self.counts.items(), key=lambda kv: (-kv[1], kv[0]))
+
+    def weighted(self, value_of: Callable[[int], float]) -> float:
+        """Traffic-weighted mean of a per-bucket value (0.0 with no demand)."""
+        total = self.total
+        if total == 0:
+            return 0.0
+        return sum(c * value_of(b) for b, c in self.counts.items()) / total
+
+    def stats(self) -> dict:
+        return {"total": self.total,
+                "buckets": {str(b): c for b, c in self.hottest()}}

@@ -1,0 +1,493 @@
+"""Serving fleet: N engine replicas behind one router and one registry.
+
+This is the layer the ROADMAP's north star asks for — a front-end that
+turns a request *stream* into batched work across engine replicas — built
+so the paper's economics compose at scale:
+
+* **One registry, N replicas** — every replica resolves through its own
+  :class:`~repro.core.resolution.ResolutionPipeline` over a *shared*
+  :class:`~repro.service.TuningService` (per hardware target) and the one
+  :class:`~repro.service.ScheduleRegistry`.  A background publish triggered
+  by traffic on any replica reaches every replica through the existing
+  generation check at its next decode-step boundary — no fleet-level
+  invalidation protocol, and zero cross-replica schedule divergence
+  (:meth:`ServingFleet.schedule_mismatches` asserts it).
+* **Demand-driven tuning** — the router's :class:`~repro.fleet.demand.\
+DemandTracker` aggregates per-prefill-bucket arrival counts; the fleet
+  prefetches tuning jobs for the hottest *unresolved* buckets
+  (:meth:`~repro.service.TuningService.prefetch`, priority = arrival
+  count), so hot shapes graduate default → transfer → exact first and cold
+  shapes never spend budget.
+* **Virtual-time simulation** — replica step durations come from the cost
+  model (the resolved plan's kernel seconds), so schedule quality feeds
+  straight into latency/throughput: a replica serving exact-tier schedules
+  finishes its steps sooner, drains its queue faster, and sheds less.  The
+  engines still run *real* (jitted) prefill/decode steps — tokens, caches,
+  replans, and plan propagation are the production code paths, only the
+  clock is simulated.
+
+Heterogeneous fleets are supported by giving replicas different hardware
+targets (``targets=[...]`` from :mod:`repro.targets`): replicas sharing a
+target share a TuningService (one namespace), targets never leak into each
+other, and ``donor_target`` lets e.g. edge replicas transfer from the
+server-tuned pool.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Sequence
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.extract import extract_kernels
+from repro.core.resolution import Resolution
+from repro.core.runner import AnalyticalRunner, CachedRunner
+from repro.core.schedule import ScheduleInvalid
+from repro.core.workload import KernelInstance, KernelUse
+from repro.fleet.demand import DemandTracker
+from repro.fleet.metrics import FleetMetrics
+from repro.fleet.router import TIER_SCORE, QueueFull, RequestRouter
+from repro.fleet.traffic import FleetRequest
+from repro.kernels.ops import ScheduleProvider
+from repro.serving import ServingEngine
+from repro.targets import DEFAULT_TARGET, target_name
+
+
+class Replica:
+    """One :class:`ServingEngine` behind the router, with a virtual clock.
+
+    ``time`` is the virtual instant the replica's current work (a prefill or
+    a batched decode step) finishes; ``step_pending`` marks that a decode
+    step must actually execute (``engine.step()``) when that instant is
+    reached.  Step costs are summed from the engine's execution plan through
+    the service's runner and memoized per plan generation — an upgrade that
+    lands mid-stream speeds the very next step up.
+    """
+
+    def __init__(self, idx: int, cfg: ArchConfig, engine: ServingEngine,
+                 service=None, target: str = DEFAULT_TARGET):
+        self.idx = idx
+        self.cfg = cfg
+        self.engine = engine
+        self.service = service
+        self.target = target
+        self.time = 0.0
+        self.busy = False
+        self.step_pending = False
+        self.requests_admitted = 0
+        self._runner = (service.runner if service is not None
+                        else CachedRunner(AnalyticalRunner(target)))
+        self._mode = service.mode if service is not None else "strict"
+        self._fleet_reqs: dict[int, FleetRequest] = {}  # engine uid -> request
+        self._decode_uses = extract_kernels(
+            cfg, ShapeConfig("serve_decode", engine.max_len, engine.slots,
+                             "decode"), dp=1, tp=1)
+        self._bucket_uses: dict[int, list[KernelUse]] = {}
+        # Plan-derived memos, valid for exactly one plan generation: a
+        # re-plan drops them wholesale, so a long-lived replica never
+        # accumulates entries for superseded generations.
+        self._caches_gen: int | None = None
+        self._cost_cache: dict[Any, float] = {}
+        self._score_cache: dict[int, tuple[float, float]] = {}
+
+    # -- surfaces the router sees ---------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return self.engine.free_slots
+
+    def utilization(self) -> float:
+        return self.engine.utilization()
+
+    def bucket_for(self, prompt_len: int) -> int:
+        return self.engine.bucket_for(min(prompt_len, self.engine.max_len))
+
+    def prefill_tier_score(self, prompt_len: int) -> float:
+        """Mean tier quality (exact=3 .. default=0) of this replica's plan
+        over the prompt's prefill-bucket kernels — what plan-aware routing
+        ranks replicas by."""
+        return self._bucket_quality(self.bucket_for(prompt_len))[0]
+
+    def prefill_exact_share(self, bucket: int) -> float:
+        """Fraction of the bucket's kernels resolved at the exact tier."""
+        return self._bucket_quality(bucket)[1]
+
+    # -- plan-derived costs ----------------------------------------------------
+    def _generation(self) -> int:
+        return self.engine.plan.generation if self.engine.plan is not None else -1
+
+    def _resolution(self, inst: KernelInstance) -> Resolution:
+        plan = self.engine.plan
+        res = plan.lookup(inst) if plan is not None else None
+        if res is None:  # outside the plan: the pipeline memo answers
+            res = self.engine.provider.pipeline.resolve(inst)
+        return res
+
+    @property
+    def decode_uses(self) -> list[KernelUse]:
+        """Kernels of the batched decode step (every request exercises them)."""
+        return self._decode_uses
+
+    def prefill_uses(self, bucket: int) -> list[KernelUse]:
+        uses = self._bucket_uses.get(bucket)
+        if uses is None:
+            uses = self._bucket_uses[bucket] = extract_kernels(
+                self.cfg, ShapeConfig(f"serve_prefill_{bucket}", bucket, 1,
+                                      "prefill"), dp=1, tp=1)
+        return uses
+
+    def _fresh_caches(self) -> None:
+        gen = self._generation()
+        if gen != self._caches_gen:
+            self._cost_cache.clear()
+            self._score_cache.clear()
+            self._caches_gen = gen
+
+    def _uses_cost(self, uses: Sequence[KernelUse], cache_key: Any) -> float:
+        self._fresh_caches()
+        cost = self._cost_cache.get(cache_key)
+        if cost is None:
+            cost = 0.0
+            for u in uses:
+                sched = self._resolution(u.instance).schedule
+                try:
+                    secs = self._runner.seconds(u.instance, sched,
+                                                mode=self._mode)
+                except ScheduleInvalid:
+                    secs = self._runner.seconds(u.instance, None)
+                cost += u.use_count * secs
+            self._cost_cache[cache_key] = cost
+        return cost
+
+    def _bucket_quality(self, bucket: int) -> tuple[float, float]:
+        self._fresh_caches()
+        q = self._score_cache.get(bucket)
+        if q is None:
+            uses = self.prefill_uses(bucket)
+            tiers = [self._resolution(u.instance).tier for u in uses]
+            score = sum(TIER_SCORE[t] for t in tiers) / len(tiers)
+            exact = sum(1 for t in tiers if t == "exact") / len(tiers)
+            q = self._score_cache[bucket] = (score, exact)
+        return q
+
+    def decode_cost(self) -> float:
+        """Virtual seconds one batched decode step takes under the plan."""
+        return self._uses_cost(self._decode_uses, "decode")
+
+    def prefill_cost(self, bucket: int) -> float:
+        return self._uses_cost(self.prefill_uses(bucket), ("prefill", bucket))
+
+    def untuned_decode_cost(self) -> float:
+        return sum(u.use_count * self._runner.seconds(u.instance, None)
+                   for u in self._decode_uses)
+
+    # -- lifecycle -------------------------------------------------------------
+    def admit(self, req: FleetRequest, now: float):
+        """Admit into the engine and charge the prefill to the clock."""
+        engine_req = self.engine.add_request(
+            req.prompt, max_new_tokens=req.max_new_tokens, eos_id=req.eos_id)
+        req.admitted_s = now
+        req.replica = self.idx
+        req.exact_share_at_admit = self.prefill_exact_share(req.bucket)
+        self.requests_admitted += 1
+        self.time = max(self.time, now) + self.prefill_cost(req.bucket)
+        self.busy, self.step_pending = True, False
+        if not engine_req.done:
+            self._fleet_reqs[engine_req.uid] = req
+        return engine_req
+
+    def complete_step(self, now: float) -> list[FleetRequest]:
+        """Run the decode step that virtually ends at ``now``."""
+        finished = self.engine.step()
+        self.busy = self.step_pending = False
+        out = []
+        for er in finished:
+            fr = self._fleet_reqs.pop(er.uid)
+            fr.tokens = len(er.generated)
+            out.append(fr)
+        return out
+
+    def start_step(self, now: float) -> None:
+        self.time = now + self.decode_cost()
+        self.busy, self.step_pending = True, True
+
+    def stats(self) -> dict:
+        plan = self.engine.plan
+        return {
+            "target": self.target,
+            "requests": self.requests_admitted,
+            "replans": self.engine.replans,
+            "utilization": self.utilization(),
+            "plan_tiers": plan.tier_counts() if plan is not None else {},
+            "plan_generation": plan.generation if plan is not None else None,
+            "prefill_traces": self.engine.prefill_trace_count,
+        }
+
+
+class ServingFleet:
+    """Router + demand tracker + N plan-aware engine replicas.
+
+    ``registry`` is the shared :class:`~repro.service.ScheduleRegistry`
+    (None serves everything untuned — no services, plans stay default-tier).
+    ``targets`` assigns one hardware target per replica (a single name
+    applies to all); replicas sharing a target share one TuningService.
+    Background tuning is deterministic: services run ``max_workers=0`` and
+    the fleet drains ``drain_jobs`` jobs every ``drain_every`` events —
+    publishes arrive in bursts, so re-plans stay bounded by bursts rather
+    than by publishes.
+    """
+
+    def __init__(self, cfg: ArchConfig, model, params, *, replicas: int = 2,
+                 slots: int = 2, max_len: int = 64,
+                 registry=None, policy: str = "round_robin",
+                 queue_cap: int = 32, prefetch: bool = False,
+                 prefetch_buckets: int = 2,
+                 targets: "Sequence[str] | str | None" = None,
+                 donor_target: str | None = None,
+                 donors: Sequence[str] | None = None,
+                 tuning_budget_s: float = float("inf"),
+                 drain_jobs: int = 2, drain_every: int = 4,
+                 seed: int = 0, extras: dict | None = None):
+        if replicas <= 0:
+            raise ValueError("need at least one replica")
+        self.cfg = cfg
+        self.registry = registry
+        self.prefetch = prefetch
+        self.prefetch_buckets = prefetch_buckets
+        self.drain_jobs = drain_jobs
+        self.drain_every = drain_every
+
+        if targets is None:
+            targets = [DEFAULT_TARGET] * replicas
+        elif isinstance(targets, str):
+            targets = [targets] * replicas
+        else:
+            targets = [target_name(t) for t in targets]
+            if len(targets) != replicas:
+                raise ValueError(
+                    f"targets ({len(targets)}) must match replicas ({replicas})")
+
+        # One TuningService per distinct target, all over the one registry.
+        self._services: dict[str, Any] = {}
+        if registry is not None:
+            from repro.service import TuningService  # lazy: optional dep cycle
+            for t in dict.fromkeys(targets):
+                self._services[t] = TuningService(
+                    registry, model_id=f"fleet/{cfg.name}",
+                    runner=CachedRunner(AnalyticalRunner(t)),
+                    max_workers=0, probe_candidates=0, seed=seed,
+                    budget_s=tuning_budget_s, target=t,
+                    donor_target=donor_target, donors=donors)
+
+        self.replicas: list[Replica] = []
+        for i, t in enumerate(targets):
+            svc = self._services.get(t)
+            provider = (ScheduleProvider(service=svc) if svc is not None
+                        else ScheduleProvider(target=t))
+            engine = ServingEngine(model, params, slots=slots, max_len=max_len,
+                                   extras=extras, provider=provider)
+            self.replicas.append(Replica(i, cfg, engine, svc, t))
+
+        self.demand = DemandTracker(bucket_for=self.replicas[0].bucket_for)
+        self.router = RequestRouter(self.replicas, policy=policy,
+                                    queue_cap=queue_cap, demand=self.demand)
+        self.metrics = FleetMetrics()
+        #: One untuned decode step of the reference replica — the trace's
+        #: time unit (TrafficGenerator ``tick_s``).
+        self.tick_s = self.replicas[0].untuned_decode_cost()
+        self.prefetched: list[str] = []   # workload keys, in prefetch order
+        self._prefetched_seen: set[str] = set()
+        self._events = 0
+        self._now = 0.0
+
+    @property
+    def services(self) -> dict:
+        """Per-target shared TuningServices (empty without a registry)."""
+        return dict(self._services)
+
+    # -- demand-driven prefetch ------------------------------------------------
+    def _prefetch_uses(self, uses: Sequence[KernelUse], priority: float) -> None:
+        for svc in self._services.values():
+            db = svc.registry.snapshot().db(None)
+            for u in uses:
+                if db.exact(u.instance, target=svc.target) is not None:
+                    continue
+                if svc.prefetch(u.instance, priority=priority):
+                    key = u.instance.workload_key()
+                    if key not in self._prefetched_seen:
+                        self._prefetched_seen.add(key)
+                        self.prefetched.append(key)
+
+    def _prefetch_hot(self) -> None:
+        """Queue tuning for the hottest unresolved shapes, hottest first.
+
+        The batched decode step is exercised by *every* request, so its
+        kernels carry the total demand; after it come the hottest prefill
+        buckets by arrival count.  Cold buckets are never touched — their
+        jobs stay at the tail of the queue and spend budget only after all
+        demanded shapes are tuned.
+        """
+        total = self.demand.total
+        if total == 0:
+            return
+        self._prefetch_uses(self.replicas[0].decode_uses, float(total))
+        for bucket, count in self.demand.hottest()[:self.prefetch_buckets]:
+            self._prefetch_uses(self.replicas[0].prefill_uses(bucket),
+                                float(count))
+
+    def _drain_services(self) -> None:
+        for svc in self._services.values():
+            svc.drain(max_jobs=self.drain_jobs)
+
+    # -- the serve loop --------------------------------------------------------
+    def _admit(self, req: FleetRequest, idx: int) -> bool:
+        replica = self.replicas[idx]
+        try:
+            engine_req = replica.admit(req, self._now)
+        except ValueError:
+            # A request the engine can never hold (e.g. prompt > max_len):
+            # the router survives it — shed, not crash (False vetoes the
+            # placement so it is not counted as dispatched).
+            req.shed = "invalid"
+            self.metrics.record_shed(req)
+            return False
+        if engine_req.done:
+            # Finished by the prefill itself (max_new_tokens=0 / prefill
+            # EOS): completes when its prefill's virtual time elapses.
+            req.tokens = len(engine_req.generated)
+            self.metrics.record_completion(req, replica.time)
+        return True
+
+    def _eligible(self) -> list[int]:
+        # Admission happens at step boundaries: a replica mid-(virtual)-step
+        # cannot accept work until its clock catches up.
+        return [i for i, r in enumerate(self.replicas)
+                if not r.busy and r.free_slots > 0]
+
+    def serve(self, trace: Sequence[FleetRequest], *,
+              max_events: int = 200_000) -> dict:
+        """Serve a traffic trace to completion; returns :meth:`summary`."""
+        arrivals = sorted(trace, key=lambda r: r.arrival_s)
+        ai = 0
+        now = 0.0
+        while True:
+            self._events += 1
+            if self._events > max_events:
+                raise RuntimeError("fleet serve did not converge")
+            next_times = []
+            if ai < len(arrivals):
+                next_times.append(arrivals[ai].arrival_s)
+            busy = [r.time for r in self.replicas if r.busy]
+            if busy:
+                next_times.append(min(busy))
+            if not next_times:
+                if not self.router.queue:
+                    break
+                # Queued work, everything idle: dispatch at the current time.
+            else:
+                now = max(now, min(next_times))
+            self._now = now
+
+            # 1) arrivals up to now enter the admission queue (or shed).
+            while ai < len(arrivals) and arrivals[ai].arrival_s <= now:
+                req = arrivals[ai]
+                ai += 1
+                try:
+                    self.router.submit(req)
+                except QueueFull:
+                    self.metrics.record_shed(req)
+
+            # 2) work that finishes at now: decode steps run for real.
+            for r in self.replicas:
+                if r.busy and r.time <= now + 1e-12:
+                    if r.step_pending:
+                        for fr in r.complete_step(now):
+                            self.metrics.record_completion(fr, now)
+                    else:
+                        r.busy = False  # prefill done; slot batch continues
+
+            # 3) background tuning in bursts: demand-ordered prefetch, then
+            #    a bounded drain (publishes coalesce -> bounded re-plans).
+            if self._services and self._events % self.drain_every == 0:
+                if self.prefetch:
+                    self._prefetch_hot()
+                self._drain_services()
+
+            # 4) route queued requests to replicas at their boundaries.
+            self.router.dispatch(now, eligible=self._eligible,
+                                 admit=self._admit)
+            for fr in self.router.last_shed_deadline:
+                self.metrics.record_shed(fr)
+            self.metrics.sample_queue(self.router.depth)
+
+            # 5) replicas with active slots begin their next decode step.
+            for r in self.replicas:
+                if not r.busy and r.engine.active:
+                    r.start_step(now)
+        return self.summary()
+
+    # -- cross-replica consistency ---------------------------------------------
+    def sync_plans(self) -> None:
+        """Bring every replica's plan to the current registry generation
+        (the same step-boundary check a live stream would perform; no
+        tokens are decoded, so it is safe mid-stream)."""
+        for r in self.replicas:
+            r.engine.refresh_plan()
+
+    def schedule_mismatches(self) -> int:
+        """Byte-level schedule divergence between same-target replicas'
+        plans after a sync — shared-registry propagation must make it 0."""
+        self.sync_plans()
+        return self._schedule_mismatches_synced()
+
+    def _schedule_mismatches_synced(self) -> int:
+        groups: dict[str, list[Replica]] = {}
+        for r in self.replicas:
+            groups.setdefault(r.target, []).append(r)
+        mismatches = 0
+        for members in groups.values():
+            base = members[0].engine.plan
+            if base is None:
+                continue
+            base_bytes = {k: json.dumps(s.to_json(), sort_keys=True)
+                          for k, s in base.schedules().items()}
+            for other in members[1:]:
+                if other.engine.plan is None:
+                    continue
+                for k, s in other.engine.plan.schedules().items():
+                    want = base_bytes.get(k)
+                    if want is not None and \
+                            json.dumps(s.to_json(), sort_keys=True) != want:
+                        mismatches += 1
+        return mismatches
+
+    # -- telemetry ------------------------------------------------------------
+    def final_exact_share(self) -> float:
+        """Traffic-weighted exact-tier share over the demand distribution,
+        under the replicas' *current* plans (the end-state quality)."""
+        self.sync_plans()
+        return self._final_exact_share_synced()
+
+    def _final_exact_share_synced(self) -> float:
+        if not self._services:
+            return 0.0
+        return self.demand.weighted(self.replicas[0].prefill_exact_share)
+
+    def summary(self) -> dict:
+        out = self.metrics.summary(tick_s=self.tick_s)
+        out["router"] = self.router.stats()
+        out["demand"] = self.demand.stats()
+        out["replicas"] = [r.stats() for r in self.replicas]
+        out["events"] = self._events
+        out["prefetched"] = len(self.prefetched)
+        self.sync_plans()  # once, for both end-state metrics below
+        out["schedule_mismatches"] = self._schedule_mismatches_synced()
+        out["final_exact_share"] = self._final_exact_share_synced()
+        if self._services:
+            out["tuning"] = {t: s.stats() for t, s in self._services.items()}
+        return out
+
+    def close(self) -> None:
+        """Shut the services down without spending budget on cold shapes:
+        queued-but-unstarted background jobs are cancelled, not drained."""
+        for svc in self._services.values():
+            svc.cancel_pending()
+            svc.close()

@@ -1,0 +1,76 @@
+"""Fleet metrics: latency percentiles, throughput, queue depth, shed rate.
+
+All times are *virtual seconds* (cost-model kernel time — see DESIGN.md §2);
+latencies are also reported in *ticks* (one tick = the untuned decode-step
+cost of the reference replica) so numbers are comparable across archs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.fleet.traffic import FleetRequest
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """q-th percentile (0..100, linear interpolation); 0.0 when empty."""
+    if not xs:
+        return 0.0
+    return float(np.percentile(xs, q))
+
+
+class FleetMetrics:
+    """Accumulates per-request outcomes and queue-depth samples."""
+
+    def __init__(self) -> None:
+        self.completed: list[FleetRequest] = []
+        self.shed: list[FleetRequest] = []
+        self.queue_samples: list[int] = []
+        self.tokens = 0
+        self.makespan_s = 0.0
+
+    def record_completion(self, req: FleetRequest, now: float) -> None:
+        req.finished_s = now
+        self.completed.append(req)
+        self.tokens += req.tokens
+        self.makespan_s = max(self.makespan_s, now)
+
+    def record_shed(self, req: FleetRequest) -> None:
+        self.shed.append(req)
+
+    def sample_queue(self, depth: int) -> None:
+        self.queue_samples.append(depth)
+
+    # -- summary ---------------------------------------------------------------
+    def latencies(self) -> list[float]:
+        return [r.latency_s for r in self.completed if r.latency_s is not None]
+
+    def summary(self, *, tick_s: float = 1.0) -> dict:
+        lats = self.latencies()
+        n_done, n_shed = len(self.completed), len(self.shed)
+        n_seen = n_done + n_shed
+        qs = self.queue_samples
+        out = {
+            "completed": n_done,
+            "shed": n_shed,
+            "shed_rate": n_shed / n_seen if n_seen else 0.0,
+            "shed_by_reason": {
+                reason: sum(1 for r in self.shed if r.shed == reason)
+                for reason in sorted({r.shed for r in self.shed})},
+            "tokens": self.tokens,
+            "makespan_s": self.makespan_s,
+            "throughput_tok_per_s": (self.tokens / self.makespan_s
+                                     if self.makespan_s > 0 else 0.0),
+            "latency_s": {"p50": percentile(lats, 50),
+                          "p95": percentile(lats, 95),
+                          "p99": percentile(lats, 99)},
+            "latency_ticks": {"p50": percentile(lats, 50) / tick_s,
+                              "p95": percentile(lats, 95) / tick_s,
+                              "p99": percentile(lats, 99) / tick_s},
+            "queue_depth_max": max(qs) if qs else 0,
+            "queue_depth_mean": sum(qs) / len(qs) if qs else 0.0,
+            "exact_share_at_admit_mean": (
+                sum(r.exact_share_at_admit for r in self.completed) / n_done
+                if n_done else 0.0),
+            "tick_s": tick_s,
+        }
+        return out

@@ -1,0 +1,132 @@
+"""Synthetic serving traffic: seeded Poisson arrivals, mixed request shapes.
+
+The fleet benchmarks need *reproducible-but-variable* load: the same seed
+must replay the identical request stream across routing policies (so policy
+comparisons are apples-to-apples on one trace), while different seeds vary
+the arrival pattern.  :class:`TrafficGenerator` produces such traces — a
+Poisson arrival process (exponential inter-arrival times) over a mixture of
+short and long prompts with per-request new-token counts and optional
+deadlines.
+
+Times are expressed in *ticks* — one tick is the untuned decode-step cost of
+a reference replica (the fleet computes it from the cost model) — so an
+``arrival_rate`` of 0.5 means "one request every two untuned step times"
+regardless of the arch being served.
+
+:func:`sample_prompts` is the shared single-engine stream sampler
+(``launch/serve.py --seed`` uses it), kept here so serve and fleet runs draw
+from the same distribution family.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """One request flowing through the router; outcome fields are filled in
+    by the fleet as the request is queued, dispatched, and completed."""
+
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    arrival_s: float                 # virtual seconds
+    deadline_s: float | None = None  # absolute; None -> never shed on age
+    eos_id: int | None = None
+    # -- routing outcome ------------------------------------------------------
+    bucket: int = 0                  # prefill bucket the demand tracker keyed
+    replica: int | None = None
+    admitted_s: float | None = None
+    finished_s: float | None = None
+    shed: str = ""                   # "" | "queue_full" | "deadline" | "invalid"
+    tokens: int = 0
+    exact_share_at_admit: float = 0.0
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.finished_s is None:
+            return None
+        return self.finished_s - self.arrival_s
+
+
+def sample_prompts(rng: np.random.Generator, n: int, vocab_size: int, *,
+                   lo: int = 3, hi: int = 8) -> list[list[int]]:
+    """``n`` random-token prompts with uniform[lo, hi] lengths.
+
+    The single-engine serve driver's stream; the fleet generator's "short"
+    mixture component uses the same family.
+    """
+    return [[int(t) for t in rng.integers(1, vocab_size,
+                                          size=int(rng.integers(lo, hi + 1)))]
+            for _ in range(n)]
+
+
+class TrafficGenerator:
+    """Seeded synthetic request stream for fleet serving.
+
+    * **Arrivals** — Poisson process: exponential inter-arrival times with
+      mean ``tick_s / arrival_rate`` (``arrival_rate`` = expected requests
+      per tick).
+    * **Prompt lengths** — a two-component mixture: ``long_frac`` of
+      requests draw uniform from ``long_lens``, the rest from
+      ``short_lens``; lengths are clamped to ``prompt_cap``.  The skew makes
+      one prefill bucket *hot*, which is what demand-driven tuning exploits.
+    * **New tokens** — uniform from ``new_tokens``.
+    * **Deadlines** — ``deadline_ticks`` ticks after arrival (None: never
+      expire).
+    """
+
+    def __init__(self, *, seed: int = 0, vocab_size: int = 256,
+                 arrival_rate: float = 0.5, tick_s: float = 1.0,
+                 short_lens: tuple[int, int] = (3, 8),
+                 long_lens: tuple[int, int] = (16, 32),
+                 long_frac: float = 0.25,
+                 new_tokens: tuple[int, int] = (4, 8),
+                 deadline_ticks: float | None = None,
+                 prompt_cap: int | None = None):
+        if arrival_rate <= 0:
+            raise ValueError("arrival_rate must be positive")
+        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.vocab_size = vocab_size
+        self.arrival_rate = arrival_rate
+        self.tick_s = tick_s
+        self.short_lens = short_lens
+        self.long_lens = long_lens
+        self.long_frac = long_frac
+        self.new_tokens = new_tokens
+        self.deadline_ticks = deadline_ticks
+        self.prompt_cap = prompt_cap
+        self._uid = 0
+        self._t = 0.0  # stream clock: carried across trace() calls
+
+    def _prompt_len(self) -> int:
+        lo, hi = (self.long_lens if self.rng.random() < self.long_frac
+                  else self.short_lens)
+        n = int(self.rng.integers(lo, hi + 1))
+        if self.prompt_cap is not None:
+            n = min(n, self.prompt_cap)
+        return max(n, 1)
+
+    def trace(self, n_requests: int) -> list[FleetRequest]:
+        """``n_requests`` arrivals in order; repeated calls continue the
+        stream (fresh generator + same seed -> identical trace)."""
+        out: list[FleetRequest] = []
+        mean_gap = self.tick_s / self.arrival_rate
+        for _ in range(n_requests):
+            self._t += float(self.rng.exponential(mean_gap))
+            t = self._t
+            plen = self._prompt_len()
+            prompt = [int(x) for x in
+                      self.rng.integers(1, self.vocab_size, size=plen)]
+            mnt = int(self.rng.integers(self.new_tokens[0],
+                                        self.new_tokens[1] + 1))
+            deadline = (t + self.deadline_ticks * self.tick_s
+                        if self.deadline_ticks is not None else None)
+            self._uid += 1
+            out.append(FleetRequest(uid=self._uid, prompt=prompt,
+                                    max_new_tokens=mnt, arrival_s=t,
+                                    deadline_s=deadline))
+        return out

@@ -39,10 +39,11 @@ import numpy as np
 
 from repro.configs.base import get_arch, reduced
 from repro.core.database import ScheduleDB
+from repro.fleet.traffic import sample_prompts
 from repro.kernels.ops import ScheduleProvider, set_default_provider, use_backend
 from repro.targets import DEFAULT_TARGET, list_targets
 from repro.models.build import build_model
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, SlotsFull
 
 
 def make_provider(args) -> tuple[ScheduleProvider, object | None]:
@@ -88,6 +89,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--tuning-workers", type=int, default=2)
     ap.add_argument("--tuning-budget-s", type=float, default=float("inf"),
                     help="virtual search seconds for background tuning jobs")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="request-stream seed (shared sampler with the fleet "
+                         "traffic generator): runs are reproducible per seed "
+                         "but vary across seeds")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -112,19 +117,21 @@ def main(argv=None) -> dict:
     engine = ServingEngine(
         model, params, slots=args.slots, max_len=args.max_len, extras=extras,
         provider=provider if args.backend == "pallas" else None)
-    rng = np.random.default_rng(0)
-    pending = [list(rng.integers(1, cfg.vocab_size, size=int(rng.integers(3, 9))))
-               for _ in range(args.requests)]
+    rng = np.random.default_rng(args.seed)
+    pending = sample_prompts(rng, args.requests, cfg.vocab_size)
     done, t0, steps = [], time.monotonic(), 0
     try:
         with use_backend(args.backend):
             while pending or engine.active:
-                while pending:
-                    req = engine.add_request([int(t) for t in pending[0]],
-                                             max_new_tokens=args.new_tokens)
-                    if req is None:
+                while pending and engine.free_slots:
+                    try:
+                        req = engine.add_request(pending[0],
+                                                 max_new_tokens=args.new_tokens)
+                    except SlotsFull:
                         break
                     pending.pop(0)
+                    if req.done:  # finished by the prefill itself
+                        done.append(req)
                 done.extend(engine.step())
                 steps += 1
                 if steps > 10_000:

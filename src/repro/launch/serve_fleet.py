@@ -1,0 +1,118 @@
+"""Fleet serving driver: a request stream across N engine replicas.
+
+Stands a :class:`~repro.fleet.ServingFleet` — router, admission queue,
+demand-driven background tuning — in front of ``--replicas`` engine
+replicas, drives a seeded synthetic trace through it, and prints the fleet
+summary JSON (throughput, p50/p95/p99 latency, queue depth, shed rate,
+per-replica tier composition, cross-replica schedule-mismatch count).
+
+    PYTHONPATH=src python -m repro.launch.serve_fleet \
+        --arch minitron-4b --replicas 3 --policy plan_aware --prefetch \
+        --arrival-rate 0.8 --queue-cap 16 --requests 24 --seed 7
+
+``--tuning-registry DIR`` shares one schedule registry across every replica
+(omitted: a temporary registry, discarded at exit — still exercises the
+full background-tuning path, just from a cold, donor-less store).
+``--targets`` assigns per-replica hardware targets (comma-separated, cycled
+over replicas) for heterogeneous fleets; ``--donor-target`` draws transfer
+donors from another chip's namespace.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.fleet import POLICIES, ServingFleet, TrafficGenerator
+from repro.models.build import build_model
+from repro.targets import DEFAULT_TARGET, list_targets
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description="serve a request stream across "
+                                             "a fleet of engine replicas")
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--policy", choices=sorted(POLICIES), default="plan_aware")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="expected requests per tick (one tick = one untuned "
+                         "decode step)")
+    ap.add_argument("--queue-cap", type=int, default=16,
+                    help="admission-queue bound; overflow sheds")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="demand-driven tuning prefetch for hot buckets")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="traffic seed (same seed -> same trace)")
+    ap.add_argument("--deadline-ticks", type=float, default=None,
+                    help="shed queued requests older than this many ticks")
+    ap.add_argument("--long-frac", type=float, default=0.25,
+                    help="fraction of long-prompt requests in the mix")
+    ap.add_argument("--targets", default=DEFAULT_TARGET,
+                    help="comma-separated per-replica hardware targets "
+                         f"(cycled; registered: {','.join(list_targets())})")
+    ap.add_argument("--donor-target", choices=list_targets(), default=None,
+                    help="draw transfer donors from another chip's namespace")
+    ap.add_argument("--tuning-registry", default="",
+                    help="shared schedule-registry dir (default: temporary)")
+    ap.add_argument("--tuning-budget-s", type=float, default=float("inf"))
+    ap.add_argument("--drain-jobs", type=int, default=2,
+                    help="background tuning jobs drained per burst")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.preset == "smoke":
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    extras = {}
+    if cfg.family == "audio":
+        extras["frames"] = np.zeros((cfg.encoder_seq, cfg.d_model), np.float32)
+    if cfg.vision_tokens:
+        extras["patch_embeds"] = np.zeros((cfg.vision_tokens, cfg.d_model),
+                                          np.float32)
+
+    from repro.service import ScheduleRegistry
+
+    tmp_root = None
+    root = args.tuning_registry
+    if not root:
+        tmp_root = tempfile.mkdtemp(prefix="fleet-registry-")
+        root = tmp_root
+    registry = ScheduleRegistry(root)
+
+    names = [t.strip() for t in args.targets.split(",") if t.strip()]
+    targets = [names[i % len(names)] for i in range(args.replicas)]
+
+    fleet = ServingFleet(
+        cfg, model, params, replicas=args.replicas, slots=args.slots,
+        max_len=args.max_len, registry=registry, policy=args.policy,
+        queue_cap=args.queue_cap, prefetch=args.prefetch, targets=targets,
+        donor_target=args.donor_target, tuning_budget_s=args.tuning_budget_s,
+        drain_jobs=args.drain_jobs, seed=args.seed, extras=extras)
+    gen = TrafficGenerator(
+        seed=args.seed, vocab_size=cfg.vocab_size,
+        arrival_rate=args.arrival_rate, tick_s=fleet.tick_s,
+        long_frac=args.long_frac, deadline_ticks=args.deadline_ticks,
+        prompt_cap=max(args.max_len // 2, 1))
+    try:
+        summary = fleet.serve(gen.trace(args.requests))
+    finally:
+        fleet.close()
+        if tmp_root is not None:
+            shutil.rmtree(tmp_root, ignore_errors=True)
+    print(json.dumps(summary))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -63,6 +63,8 @@ class _Job:
     instance: KernelInstance
     future: Future | None = None   # None -> deferred (drained inline)
     started: bool = False
+    priority: float = 0.0          # higher drains first (deferred mode)
+    seq: int = 0                   # FIFO tiebreak within a priority
 
 
 class TuningService:
@@ -111,6 +113,7 @@ class TuningService:
         self._publish_lock = threading.Lock()
         self._jobs: dict[str, _Job] = {}
         self._attempted: set[str] = set()
+        self._job_seq = 0
         self._spent_s = 0.0
         self._probe_s = 0.0
         # Publish log for changed-workload notification: (generation before,
@@ -120,7 +123,8 @@ class TuningService:
             "lookups": 0, "exact_hits": 0, "transfer_hits": 0,
             "default_misses": 0, "jobs_enqueued": 0, "jobs_deduped": 0,
             "jobs_rejected_budget": 0, "jobs_completed": 0, "jobs_failed": 0,
-            "upgrades": 0, "publish_skipped": 0,
+            "upgrades": 0, "publish_skipped": 0, "prefetches": 0,
+            "jobs_cancelled": 0,
         }
 
     # -- lookup ---------------------------------------------------------------
@@ -200,20 +204,75 @@ class TuningService:
         return LookupResult(None, "default", untuned, untuned, "", snap.generation)
 
     # -- background jobs ------------------------------------------------------
-    def _enqueue(self, instance: KernelInstance) -> None:
+    def _enqueue(self, instance: KernelInstance, *,
+                 priority: float = 0.0) -> bool:
+        """Queue a background transfer-tuning job (dedup + budget gated).
+
+        Returns True when a job for the workload is now pending (whether
+        this call created it or one was already queued).
+        """
         key = instance.workload_key()
         with self._lock:
-            if key in self._jobs or key in self._attempted:
+            job = self._jobs.get(key)
+            if job is not None:
                 self._counters["jobs_deduped"] += 1
-                return
+                # A hotter demand signal promotes an already-queued job.
+                if not job.started and priority > job.priority:
+                    job.priority = priority
+                return not job.started
+            if key in self._attempted:
+                self._counters["jobs_deduped"] += 1
+                return False
             if self._spent_s >= self.budget_s:
                 self._counters["jobs_rejected_budget"] += 1
-                return
-            job = _Job(instance)
+                return False
+            self._job_seq += 1
+            job = _Job(instance, priority=priority, seq=self._job_seq)
             self._jobs[key] = job
             self._counters["jobs_enqueued"] += 1
             if self._pool is not None:
                 job.future = self._pool.submit(self._run_job, key)
+            return True
+
+    def prefetch(self, instance: KernelInstance, *,
+                 priority: float = 0.0) -> bool:
+        """Demand-driven enqueue: queue (or promote) a tuning job *ahead* of
+        a serving miss.
+
+        Fleets call this for the hottest unresolved shapes so upgrades land
+        before demand peaks.  ``priority`` orders the deferred drain queue
+        (higher first; FIFO within a priority) — in threaded mode it is
+        advisory, since the pool runs jobs in submission order.  Returns
+        True when a job for the workload is pending.
+        """
+        with self._lock:
+            self._counters["prefetches"] += 1
+        return self._enqueue(instance, priority=priority)
+
+    def pending_jobs(self) -> list[str]:
+        """Workload keys awaiting background tuning, in deferred-drain order
+        (highest priority first, then FIFO)."""
+        with self._lock:
+            jobs = [j for j in self._jobs.values() if not j.started]
+        jobs.sort(key=lambda j: (-j.priority, j.seq))
+        return [j.instance.workload_key() for j in jobs]
+
+    def cancel_pending(self) -> int:
+        """Drop queued jobs that have not started (deferred mode only —
+        pool-submitted jobs run regardless).
+
+        The workloads are *not* marked attempted: a later lookup or
+        prefetch may legitimately re-enqueue them.  Callers shutting down
+        (e.g. a fleet at end of trace) use this so ``close()``'s drain does
+        not spend search budget tuning shapes nobody is waiting for.
+        """
+        with self._lock:
+            keys = [k for k, j in self._jobs.items()
+                    if j.future is None and not j.started]
+            for k in keys:
+                del self._jobs[k]
+            self._counters["jobs_cancelled"] += len(keys)
+        return len(keys)
 
     def _run_job(self, key: str) -> bool:
         """Transfer-tune one missed workload and publish an upgrade.
@@ -334,11 +393,14 @@ class TuningService:
         if self._pool is None:
             while True:
                 with self._lock:
-                    pending = [k for k, j in self._jobs.items()
+                    pending = [(-j.priority, j.seq, k)
+                               for k, j in self._jobs.items()
                                if j.future is None and not j.started]
                 if not pending or (max_jobs is not None and finished >= max_jobs):
                     return finished
-                self._run_job(pending[0])
+                # Highest demand priority first, FIFO within a priority —
+                # the order pending_jobs() reports.
+                self._run_job(min(pending)[2])
                 finished += 1
         while True:
             with self._lock:

@@ -1,3 +1,3 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, SlotsFull
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "SlotsFull"]

@@ -44,6 +44,12 @@ from repro.core.resolution import ExecutionPlan, plan_serving
 from repro.models.build import Model
 
 
+class SlotsFull(RuntimeError):
+    """Raised by :meth:`ServingEngine.add_request` when every decode slot is
+    occupied — the engine-level backpressure signal (routers queue or shed on
+    it instead of probing for a ``None`` return)."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -142,17 +148,41 @@ class ServingEngine:
         """Distinct prefill shapes traced so far (bounded by the buckets)."""
         return len(self._prefill_lengths)
 
+    def bucket_for(self, prompt_len: int) -> int:
+        """The prefill bucket a prompt of this length pads to (routers and
+        demand trackers key on it)."""
+        return self._pad_len(prompt_len)
+
+    # -- admission accessors ---------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        """Decode slots currently available for admission."""
+        return self.slots - len(self.active)
+
+    def utilization(self) -> float:
+        """Fraction of decode slots occupied (0.0 idle .. 1.0 full)."""
+        return len(self.active) / self.slots
+
     # -- request admission ---------------------------------------------------
     def add_request(self, prompt: list[int], max_new_tokens: int = 16,
-                    eos_id: int | None = None) -> Request | None:
-        """Admit a request into a free slot (None if the batch is full)."""
+                    eos_id: int | None = None) -> Request:
+        """Admit a request into a free slot.
+
+        Raises :class:`SlotsFull` when the batch is full and ``ValueError``
+        for a prompt the cache cannot hold.  A request the prefill already
+        finishes — ``max_new_tokens <= 0``, or the prefill token is EOS — is
+        returned ``done`` without ever occupying a slot.
+        """
+        n = len(prompt)
+        if n > self.max_len:
+            raise ValueError(
+                f"prompt length {n} exceeds max_len {self.max_len}")
         free = [s for s in range(self.slots) if s not in self.active]
         if not free:
-            return None
+            raise SlotsFull(f"all {self.slots} decode slots are occupied")
         slot = free[0]
         self._uid += 1
         req = Request(self._uid, list(prompt), max_new_tokens, eos_id)
-        n = len(req.prompt)
         pad = self._pad_len(n)
         self._prefill_lengths.add(pad)
         toks = req.prompt + [0] * (pad - n)
@@ -161,7 +191,13 @@ class ServingEngine:
             batch[k] = v[None] if v.ndim == 2 else v  # (1, ..., D) stub inputs
         logits, cache1 = self._prefill(self.params, batch,
                                        jnp.asarray(n, jnp.int32))
-        req.generated.append(int(jnp.argmax(logits[0])))
+        tok = int(jnp.argmax(logits[0]))
+        req.generated.append(tok)
+        if max_new_tokens <= 0 or (eos_id is not None and tok == eos_id):
+            # The prefill token is the whole response: the slot stays free
+            # (its cache rows are overwritten by the next admission).
+            req.done = True
+            return req
         self.cache = jax.tree_util.tree_map(
             lambda full, one: _splice_slot(full, one, slot), self.cache, cache1
         )
@@ -183,6 +219,14 @@ class ServingEngine:
         self.provider.plan = self.plan
         self.replans += 1
         self._make_fns()
+
+    def refresh_plan(self) -> bool:
+        """Adopt any newer published schedule generation *now* — the same
+        boundary check :meth:`step` performs, without decoding a token.
+        Returns True when the plan was swapped."""
+        before = self.replans
+        self._maybe_replan()
+        return self.replans != before
 
     def step(self) -> list[Request]:
         """One batched decode step for all active slots; returns finished."""

@@ -1,0 +1,270 @@
+"""Serving fleet: router queueing/backpressure, dispatch-policy invariants,
+cross-replica upgrade propagation, and demand-driven prefetch ordering."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.database import Record
+from repro.core.schedule import default_schedule
+from repro.core.tuner import tune_arch_registry
+from repro.fleet import (
+    DemandTracker,
+    FleetRequest,
+    QueueFull,
+    RequestRouter,
+    ServingFleet,
+    TrafficGenerator,
+    make_policy,
+)
+from repro.models import build_model
+from repro.service import ScheduleRegistry
+from repro.targets import DEFAULT_TARGET
+
+
+# ---------------------------------------------------------------------------
+# Router + policies (fake replicas: no engines needed)
+# ---------------------------------------------------------------------------
+
+
+class FakeReplica:
+    def __init__(self, free=1, score=0.0):
+        self.free_slots = free
+        self.score = score
+        self.admitted = []
+
+    def prefill_tier_score(self, prompt_len):
+        return self.score
+
+    def admit(self, req, now):
+        assert self.free_slots > 0
+        self.free_slots -= 1
+        self.admitted.append(req)
+
+
+def _req(uid, arrival=0.0, deadline=None, plen=3):
+    return FleetRequest(uid=uid, prompt=[1] * plen, max_new_tokens=2,
+                        arrival_s=arrival, deadline_s=deadline)
+
+
+def test_queue_backpressure_sheds_at_cap():
+    router = RequestRouter([FakeReplica(free=0)], queue_cap=2)
+    router.submit(_req(1))
+    router.submit(_req(2))
+    overflow = _req(3)
+    with pytest.raises(QueueFull):
+        router.submit(overflow)
+    assert overflow.shed == "queue_full"
+    assert router.counters["shed_queue_full"] == 1
+    assert router.counters["submitted"] == 3
+    assert router.max_queue_depth == 2
+    # no replica has a free slot: everything stays queued
+    assert router.dispatch(0.0) == []
+    assert router.depth == 2
+
+
+def test_deadline_expired_requests_shed_at_dispatch():
+    router = RequestRouter([FakeReplica(free=2)])
+    expired = _req(1, arrival=0.0, deadline=1.0)
+    alive = _req(2, arrival=0.0, deadline=100.0)
+    router.submit(expired)
+    router.submit(alive)
+    out = router.dispatch(now=5.0)
+    assert [(r.uid, idx) for r, idx in out] == [(2, 0)]
+    assert expired.shed == "deadline"
+    assert router.counters["shed_deadline"] == 1
+    assert router.last_shed_deadline == [expired]
+
+
+def test_round_robin_cycles_and_skips_full():
+    reps = [FakeReplica(free=4), FakeReplica(free=0), FakeReplica(free=4)]
+    router = RequestRouter(reps, policy="round_robin", queue_cap=16)
+    for i in range(4):
+        router.submit(_req(i))
+    out = router.dispatch()
+    assert [idx for _, idx in out] == [0, 2, 0, 2]  # replica 1 has no slot
+
+
+def test_least_loaded_picks_most_free_slots():
+    reps = [FakeReplica(free=1), FakeReplica(free=3), FakeReplica(free=2)]
+    router = RequestRouter(reps, policy="least_loaded", queue_cap=16)
+    for i in range(3):
+        router.submit(_req(i))
+    out = router.dispatch()
+    # 3 free wins, then the 2/2 tie goes to the lower index
+    assert [idx for _, idx in out] == [1, 1, 2]
+
+
+def test_plan_aware_prefers_best_tier_score():
+    reps = [FakeReplica(free=2, score=0.0), FakeReplica(free=2, score=3.0),
+            FakeReplica(free=2, score=2.0)]
+    router = RequestRouter(reps, policy="plan_aware", queue_cap=16)
+    for i in range(3):
+        router.submit(_req(i))
+    out = router.dispatch()
+    assert [idx for _, idx in out] == [1, 1, 2]
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(KeyError, match="unknown dispatch policy"):
+        make_policy("best_effort")
+
+
+# ---------------------------------------------------------------------------
+# Traffic generator
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_is_seed_deterministic_and_bounded():
+    kw = dict(vocab_size=64, arrival_rate=0.5, tick_s=2.0, prompt_cap=10,
+              deadline_ticks=8.0)
+    a = TrafficGenerator(seed=7, **kw).trace(20)
+    b = TrafficGenerator(seed=7, **kw).trace(20)
+    c = TrafficGenerator(seed=8, **kw).trace(20)
+    assert [(r.arrival_s, r.prompt, r.max_new_tokens) for r in a] == \
+           [(r.arrival_s, r.prompt, r.max_new_tokens) for r in b]
+    assert [r.prompt for r in a] != [r.prompt for r in c]
+    for r in a:
+        assert 1 <= len(r.prompt) <= 10
+        assert r.deadline_s == pytest.approx(r.arrival_s + 16.0)
+    arrivals = [r.arrival_s for r in a]
+    assert arrivals == sorted(arrivals) and arrivals[0] > 0
+
+
+def test_demand_tracker_ranks_hottest_first():
+    d = DemandTracker(bucket_for=lambda n: 1 << (n - 1).bit_length())
+    for plen, times in ((3, 5), (9, 2), (30, 1)):
+        for _ in range(times):
+            d.record(_req(0, plen=plen))
+    assert d.hottest() == [(4, 5), (16, 2), (32, 1)]
+    assert d.total == 8
+    assert d.weighted(lambda b: 1.0 if b == 4 else 0.0) == pytest.approx(5 / 8)
+
+
+# ---------------------------------------------------------------------------
+# Real-engine fleet behaviour
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = reduced(get_arch("minitron-4b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_cross_replica_upgrade_propagation(small_lm, tmp_path):
+    """A publish triggered anywhere reaches every replica through the shared
+    registry at its next step boundary — zero schedule divergence."""
+    cfg, model, params = small_lm
+    registry = ScheduleRegistry(str(tmp_path / "reg"))
+    fleet = ServingFleet(cfg, model, params, replicas=2, slots=2, max_len=32,
+                         registry=registry)
+    service = fleet.services[DEFAULT_TARGET]
+    plans = [r.engine.plan for r in fleet.replicas]
+    assert all(p is not None and len(p) > 0 for p in plans)
+
+    inst = next(u.instance for u in plans[0].uses
+                if u.instance.class_id == "matmul")
+    assert all(p.lookup(inst).tier == "default" for p in plans)
+    upgraded = dataclasses.replace(default_schedule(inst), unroll=4,
+                                   source="background")
+    registry.publish([Record(instance=inst, schedule=upgraded,
+                             seconds=service.runner.seconds(inst, upgraded),
+                             model_id="background", target=service.target)])
+
+    assert fleet.schedule_mismatches() == 0  # syncs every replica first
+    for r in fleet.replicas:
+        entry = r.engine.plan.lookup(inst)
+        assert entry.tier == "exact" and entry.schedule == upgraded
+        assert r.engine.replans >= 1
+    fleet.close()
+
+
+def test_heterogeneous_targets_keep_namespaces_apart(small_lm, tmp_path):
+    """An upgrade published for one chip never leaks into another target's
+    replicas; same-target propagation still holds."""
+    cfg, model, params = small_lm
+    registry = ScheduleRegistry(str(tmp_path / "reg"))
+    fleet = ServingFleet(cfg, model, params, replicas=3, slots=2, max_len=32,
+                         registry=registry,
+                         targets=["tpu-v5e", "tpu-v5e", "tpu-v5e-lite"])
+    assert sorted(fleet.services) == ["tpu-v5e", "tpu-v5e-lite"]
+    service = fleet.services["tpu-v5e"]
+
+    inst = next(u.instance for u in fleet.replicas[0].engine.plan.uses
+                if u.instance.class_id == "matmul")
+    upgraded = dataclasses.replace(default_schedule(inst), unroll=4,
+                                   source="background")
+    registry.publish([Record(instance=inst, schedule=upgraded,
+                             seconds=service.runner.seconds(inst, upgraded),
+                             model_id="background", target="tpu-v5e")])
+    assert fleet.schedule_mismatches() == 0
+    for r in fleet.replicas:
+        tier = r.engine.plan.lookup(inst).tier
+        assert tier == ("exact" if r.target == "tpu-v5e" else "default")
+    fleet.close()
+
+
+def test_demand_prefetch_orders_hottest_first(small_lm, tmp_path):
+    """Prefetch promotes the hottest bucket's kernels to the front of the
+    background queue: they are tuned (drained) before any cold shape."""
+    cfg, model, params = small_lm
+    registry = ScheduleRegistry(str(tmp_path / "reg"))
+    tune_arch_registry(registry, "internvl2-26b", "train_4k", dp=16, tp=16,
+                       total_trials=128, seed=0)
+    fleet = ServingFleet(cfg, model, params, replicas=1, slots=2, max_len=32,
+                         registry=registry, prefetch=True, prefetch_buckets=1)
+    # hot bucket 4 (five arrivals), cold bucket 16 (one arrival)
+    for uid in range(5):
+        fleet.demand.record(_req(uid, plen=3))
+    fleet.demand.record(_req(9, plen=9))
+    fleet._prefetch_hot()
+
+    svc = fleet.services[DEFAULT_TARGET]
+    decode = {u.instance.workload_key()
+              for u in fleet.replicas[0].decode_uses}
+    hot = {u.instance.workload_key()
+           for u in fleet.replicas[0].prefill_uses(4)}
+    cold = {u.instance.workload_key()
+            for u in fleet.replicas[0].prefill_uses(16)}
+    pending = svc.pending_jobs()
+    # plan construction queued everything at priority 0; prefetch promoted
+    # the decode kernels (every request's demand) then the hot bucket's
+    assert set(pending[:len(decode)]) == decode
+    assert set(pending[len(decode):len(decode) + len(hot)]) == hot
+    assert svc.stats()["prefetches"] >= len(hot)
+
+    svc.drain(max_jobs=len(decode) + len(hot))
+    remaining = set(svc.pending_jobs())
+    assert hot.isdisjoint(remaining)       # hottest shapes tuned first...
+    assert cold <= remaining               # ...cold ones still waiting
+    assert svc.stats()["upgrades"] >= 1    # and upgrades actually landed
+    fleet.close()
+
+
+def test_fleet_serves_a_trace_end_to_end(small_lm, tmp_path):
+    """Every submitted request is either completed or shed; queue bounds
+    hold; the summary carries the acceptance metrics."""
+    cfg, model, params = small_lm
+    registry = ScheduleRegistry(str(tmp_path / "reg"))
+    fleet = ServingFleet(cfg, model, params, replicas=2, slots=2, max_len=32,
+                         registry=registry, policy="least_loaded",
+                         queue_cap=4)
+    gen = TrafficGenerator(seed=3, vocab_size=cfg.vocab_size,
+                           arrival_rate=1.5, tick_s=fleet.tick_s,
+                           short_lens=(3, 6), long_lens=(8, 12),
+                           new_tokens=(2, 4), prompt_cap=12)
+    summary = fleet.serve(gen.trace(10))
+    assert summary["completed"] + summary["shed"] == 10
+    assert summary["completed"] > 0
+    assert summary["tokens"] > 0 and summary["throughput_tok_per_s"] > 0
+    assert summary["queue_depth_max"] <= 4
+    assert summary["latency_s"]["p50"] <= summary["latency_s"]["p95"] \
+           <= summary["latency_s"]["p99"]
+    assert summary["schedule_mismatches"] == 0
+    for r in summary["replicas"]:
+        assert r["requests"] >= 0 and "plan_tiers" in r
+    fleet.close()

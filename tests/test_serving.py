@@ -5,7 +5,7 @@ import pytest
 
 from repro.configs import get_arch, reduced
 from repro.models import build_model
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, SlotsFull
 
 
 @pytest.fixture(scope="module")
@@ -19,10 +19,46 @@ def small_lm():
 def test_fills_slots_and_rejects_overflow(small_lm):
     cfg, model, params = small_lm
     eng = ServingEngine(model, params, slots=2, max_len=32)
+    assert eng.free_slots == 2 and eng.utilization() == 0.0
     assert eng.add_request([1, 2, 3]) is not None
     assert eng.add_request([4, 5]) is not None
-    assert eng.add_request([6]) is None  # full
+    assert eng.free_slots == 0 and eng.utilization() == 1.0
+    with pytest.raises(SlotsFull):
+        eng.add_request([6])  # full batch: explicit backpressure signal
     eng.run_to_completion()
+    assert not eng.active
+    assert eng.free_slots == 2
+
+
+def test_prompt_longer_than_max_len_rejected(small_lm):
+    cfg, model, params = small_lm
+    eng = ServingEngine(model, params, slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.add_request(list(range(1, 10)))
+    assert not eng.active  # nothing was admitted
+
+
+def test_zero_new_tokens_finishes_at_admission(small_lm):
+    cfg, model, params = small_lm
+    eng = ServingEngine(model, params, slots=1, max_len=32)
+    r = eng.add_request([1, 2, 3], max_new_tokens=0)
+    # prefill emits the one (free) token; no decode slot is ever held
+    assert r.done and len(r.generated) == 1
+    assert not eng.active and eng.free_slots == 1
+    # the slot is immediately reusable
+    r2 = eng.add_request([4, 5], max_new_tokens=2)
+    eng.run_to_completion()
+    assert r2.done
+
+
+def test_eos_on_prefill_token_finishes_at_admission(small_lm):
+    cfg, model, params = small_lm
+    probe = ServingEngine(model, params, slots=1, max_len=32)
+    first = probe.add_request([1, 2, 3], max_new_tokens=4).generated[0]
+
+    eng = ServingEngine(model, params, slots=1, max_len=32)
+    r = eng.add_request([1, 2, 3], max_new_tokens=4, eos_id=first)
+    assert r.done and r.generated == [first]
     assert not eng.active
 
 
