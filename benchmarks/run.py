@@ -19,6 +19,7 @@ def main() -> None:
         bench_headline,
         bench_heuristic,
         bench_kernel_matrix,
+        bench_paged,
         bench_pool,
         bench_resnet,
         bench_resolution,
@@ -44,6 +45,7 @@ def main() -> None:
         ("§5.3 server-vs-edge multi-target", bench_targets),
         ("Execution-plan resolution pipeline", bench_resolution),
         ("Serving fleet: router + demand-driven tuning", bench_fleet),
+        ("Paged continuous batching vs fixed slots", bench_paged),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

@@ -134,7 +134,10 @@ class ShapeConfig:
     name: str
     seq_len: int
     global_batch: int
-    kind: str  # "train" | "prefill" | "decode"
+    kind: str  # "train" | "prefill" | "decode" | "chunk_prefill"
+    # chunk_prefill only: total cache context the chunk attends into
+    # (seq_len is the chunk length itself).  0 elsewhere.
+    ctx_len: int = 0
 
 
 SHAPES: dict[str, ShapeConfig] = {

@@ -29,6 +29,10 @@ def extract_kernels(cfg: ArchConfig, shape: ShapeConfig, *, dp: int = 1,
     h, kv = cfg.n_heads, cfg.n_kv_heads
     dt = cfg.dtype
     decode = shape.kind == "decode"
+    # chunk_prefill: seq_len tokens of one sequence attending into a cache of
+    # ctx_len positions (paged serving's interleaved prefill slices)
+    chunk = shape.kind == "chunk_prefill"
+    ctx = shape.ctx_len if chunk and shape.ctx_len else shape.seq_len
     b_local = _div(shape.global_batch, dp)
     s = shape.seq_len
     tokens = b_local if decode else b_local * s
@@ -53,10 +57,16 @@ def extract_kernels(cfg: ArchConfig, shape: ShapeConfig, *, dp: int = 1,
         h_loc = max(_div(h, tp), 1)
         if n_global:
             cls = "flash_attention_softcap" if cfg.attn_softcap > 0 else "flash_attention_causal"
-            add(cls, n_global, "attn.global", Q=q_len, KV=s, H=h_loc, D=hd, B=b_local)
+            add(cls, n_global, "attn.global", Q=q_len, KV=ctx if chunk else s,
+                H=h_loc, D=hd, B=b_local)
         if n_local:
             cls = "flash_attention_swa" if len(set(kinds)) == 1 else "flash_attention_local"
-            kv_len = min(cfg.window, s) if decode else s
+            if decode:
+                kv_len = min(cfg.window, s)
+            elif chunk:  # [ring prefix ‖ chunk]
+                kv_len = min(cfg.window or ctx, ctx) + s
+            else:
+                kv_len = s
             add(cls, n_local, "attn.local", Q=q_len, KV=kv_len, H=h_loc, D=hd,
                 B=b_local, window=cfg.window)
         # per-attention-layer FFN
@@ -115,7 +125,8 @@ def extract_kernels(cfg: ArchConfig, shape: ShapeConfig, *, dp: int = 1,
 
     # ---- lm head ------------------------------------------------------------------------
     head_cls = "matmul_lmhead_softcap" if cfg.final_softcap > 0 else "matmul_lmhead"
-    head_tokens = b_local if decode else tokens
+    # decode and chunk_prefill project logits for the last position only
+    head_tokens = b_local if (decode or chunk) else tokens
     add(head_cls, 1, "lm_head", M=head_tokens, N=_div(cfg.vocab_size, tp), K=d)
 
     return dedup_uses(uses)

@@ -429,3 +429,32 @@ def plan_serving(model_cfg, pipeline: ResolutionPipeline, *, slots: int,
             model_cfg, ShapeConfig(f"serve_prefill_{n}", n, 1, "prefill"),
             dp=1, tp=1))
     return plan_uses(uses, pipeline, label=label)
+
+
+def plan_serving_paged(model_cfg, pipeline: ResolutionPipeline, *,
+                       decode_batch: int, page_size: int, pages_per_seq: int,
+                       chunk_lens: Sequence[int] = (),
+                       label: str | None = None) -> ExecutionPlan:
+    """Pre-resolve a *paged* serving engine's kernel set.
+
+    The paged engine's workload classes key on (decode-batch-size,
+    page-size): the batched decode step runs at ``decode_batch`` lanes over
+    a per-lane context of ``page_size * pages_per_seq`` gathered pages, and
+    prefill is batch-1 ``chunk_prefill`` cells — one per chunk length —
+    attending into that same context.  The registry/TuningService stack
+    learns these shapes exactly like any other cell.
+    """
+    from repro.configs.base import ShapeConfig  # lazy: layering
+    from repro.core.extract import extract_kernels
+
+    max_ctx = page_size * pages_per_seq
+    if label is None:
+        label = f"paged/b{decode_batch}/p{page_size}"
+    uses = list(extract_kernels(
+        model_cfg, ShapeConfig("paged_decode", max_ctx, decode_batch,
+                               "decode"), dp=1, tp=1))
+    for c in sorted(set(int(c) for c in chunk_lens)):
+        uses.extend(extract_kernels(
+            model_cfg, ShapeConfig(f"paged_chunk_{c}", c, 1, "chunk_prefill",
+                                   ctx_len=max_ctx), dp=1, tp=1))
+    return plan_uses(uses, pipeline, label=label)

@@ -9,7 +9,7 @@ A request front-end over N :class:`~repro.serving.ServingEngine` replicas:
     fleet.py ....... replicas + shared-registry propagation + the serve loop
 """
 from repro.fleet.demand import DemandTracker
-from repro.fleet.fleet import Replica, ServingFleet
+from repro.fleet.fleet import PagedReplica, Replica, ServingFleet
 from repro.fleet.metrics import FleetMetrics, percentile
 from repro.fleet.router import (
     POLICIES,
@@ -31,6 +31,7 @@ __all__ = [
     "FleetRequest",
     "LeastLoaded",
     "POLICIES",
+    "PagedReplica",
     "PlanAware",
     "QueueFull",
     "Replica",

@@ -48,7 +48,7 @@ from repro.fleet.metrics import FleetMetrics
 from repro.fleet.router import TIER_SCORE, QueueFull, RequestRouter
 from repro.fleet.traffic import FleetRequest
 from repro.kernels.ops import ScheduleProvider
-from repro.serving import ServingEngine
+from repro.serving import PagedServingEngine, ServingEngine
 from repro.targets import DEFAULT_TARGET, target_name
 
 
@@ -78,9 +78,7 @@ class Replica:
                         else CachedRunner(AnalyticalRunner(target)))
         self._mode = service.mode if service is not None else "strict"
         self._fleet_reqs: dict[int, FleetRequest] = {}  # engine uid -> request
-        self._decode_uses = extract_kernels(
-            cfg, ShapeConfig("serve_decode", engine.max_len, engine.slots,
-                             "decode"), dp=1, tp=1)
+        self._decode_uses = self._serving_uses()
         self._bucket_uses: dict[int, list[KernelUse]] = {}
         # Plan-derived memos, valid for exactly one plan generation: a
         # re-plan drops them wholesale, so a long-lived replica never
@@ -88,6 +86,12 @@ class Replica:
         self._caches_gen: int | None = None
         self._cost_cache: dict[Any, float] = {}
         self._score_cache: dict[int, tuple[float, float]] = {}
+
+    def _serving_uses(self) -> list[KernelUse]:
+        """Kernels of this engine's batched decode cell (subclass hook)."""
+        return extract_kernels(
+            self.cfg, ShapeConfig("serve_decode", self.engine.max_len,
+                                  self.engine.slots, "decode"), dp=1, tp=1)
 
     # -- surfaces the router sees ---------------------------------------------
     @property
@@ -222,6 +226,74 @@ class Replica:
         }
 
 
+class PagedReplica(Replica):
+    """A :class:`~repro.serving.PagedServingEngine` behind the router.
+
+    Everything follows from iteration-level admission: ``admit`` only
+    enqueues (no synchronous prefill, so no time is charged — the request's
+    chunks are billed inside the steps that run them); a step's cost is the
+    engine's *planned* work for that iteration — the ``chunk_prefill``
+    cells it will run plus the batched decode cell — so prefill and decode
+    share the virtual clock exactly the way they share the iteration.
+    ``expected_step_s`` exposes the same estimate to deadline-aware routing
+    *before* the step starts (the scheduler is pure, so preview and
+    execution always agree).
+    """
+
+    def _serving_uses(self) -> list[KernelUse]:
+        e = self.engine
+        return extract_kernels(
+            self.cfg, ShapeConfig("paged_decode", e.max_ctx, e.decode_batch,
+                                  "decode"), dp=1, tp=1)
+
+    def bucket_for(self, prompt_len: int) -> int:
+        return self.engine.bucket_for(prompt_len)
+
+    def prefill_uses(self, bucket: int) -> list[KernelUse]:
+        # "bucket" is a chunk length here: the same chunk_prefill cell the
+        # plan (:func:`plan_serving_paged`) froze for that length.
+        uses = self._bucket_uses.get(bucket)
+        if uses is None:
+            uses = self._bucket_uses[bucket] = extract_kernels(
+                self.cfg, ShapeConfig(f"paged_chunk_{bucket}", bucket, 1,
+                                      "chunk_prefill",
+                                      ctx_len=self.engine.max_ctx), dp=1, tp=1)
+        return uses
+
+    def expected_step_s(self) -> float:
+        """Virtual cost of the engine's next iteration under the plan."""
+        work = self.engine.planned_work()
+        cost = sum(self.prefill_cost(c) for c in work["chunk_lens"])
+        if work["decode"]:
+            cost += self.decode_cost()
+        # nothing runnable this instant (e.g. pure preemption step): charge
+        # a decode step so the clock always advances
+        return cost if cost > 0.0 else self.decode_cost()
+
+    def admit(self, req: FleetRequest, now: float):
+        """Enqueue into the engine — O(1), no clock charge, no busy flag:
+        the admitted request's first chunk runs inside the next step."""
+        engine_req = self.engine.add_request(
+            req.prompt, max_new_tokens=req.max_new_tokens, eos_id=req.eos_id)
+        req.admitted_s = now
+        req.replica = self.idx
+        req.exact_share_at_admit = self.prefill_exact_share(req.bucket)
+        self.requests_admitted += 1
+        self._fleet_reqs[engine_req.uid] = req
+        return engine_req
+
+    def start_step(self, now: float) -> None:
+        self.time = now + self.expected_step_s()
+        self.busy, self.step_pending = True, True
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["engine"] = "paged"
+        out["preemptions"] = self.engine.preemptions
+        out["page_utilization"] = self.engine.utilization()
+        return out
+
+
 class ServingFleet:
     """Router + demand tracker + N plan-aware engine replicas.
 
@@ -233,10 +305,20 @@ class ServingFleet:
     the fleet drains ``drain_jobs`` jobs every ``drain_every`` events —
     publishes arrive in bursts, so re-plans stay bounded by bursts rather
     than by publishes.
+
+    ``engine`` selects the replica engine: ``"slot"`` (the fixed-slot
+    baseline) or ``"paged"`` (iteration-level continuous batching over a
+    paged KV pool — ``decode_batch``/``page_size``/``pool_pages``/``chunk``
+    parameterize it; ``max_len`` becomes the per-request ``max_ctx``;
+    ``slots`` is ignored in favor of ``decode_batch``).
     """
 
     def __init__(self, cfg: ArchConfig, model, params, *, replicas: int = 2,
                  slots: int = 2, max_len: int = 64,
+                 engine: str = "slot", decode_batch: int | None = None,
+                 page_size: int = 8, pool_pages: int | None = None,
+                 chunk: int = 8, chunks_per_step: int | None = None,
+                 admit_cap: int | None = None,
                  registry=None, policy: str = "round_robin",
                  queue_cap: int = 32, prefetch: bool = False,
                  prefetch_buckets: int = 2,
@@ -246,6 +328,9 @@ class ServingFleet:
                  tuning_budget_s: float = float("inf"),
                  drain_jobs: int = 2, drain_every: int = 4,
                  seed: int = 0, extras: dict | None = None):
+        if engine not in ("slot", "paged"):
+            raise ValueError(f"unknown engine {engine!r}: 'slot' or 'paged'")
+        self.engine_kind = engine
         if replicas <= 0:
             raise ValueError("need at least one replica")
         self.cfg = cfg
@@ -282,9 +367,19 @@ class ServingFleet:
             svc = self._services.get(t)
             provider = (ScheduleProvider(service=svc) if svc is not None
                         else ScheduleProvider(target=t))
-            engine = ServingEngine(model, params, slots=slots, max_len=max_len,
-                                   extras=extras, provider=provider)
-            self.replicas.append(Replica(i, cfg, engine, svc, t))
+            if engine == "paged":
+                eng = PagedServingEngine(
+                    model, params, decode_batch=decode_batch or slots,
+                    max_ctx=max_len, page_size=page_size,
+                    pool_pages=pool_pages, chunk=chunk,
+                    chunks_per_step=chunks_per_step, admit_cap=admit_cap,
+                    provider=provider)
+                self.replicas.append(PagedReplica(i, cfg, eng, svc, t))
+            else:
+                eng = ServingEngine(model, params, slots=slots,
+                                    max_len=max_len, extras=extras,
+                                    provider=provider)
+                self.replicas.append(Replica(i, cfg, eng, svc, t))
 
         self.demand = DemandTracker(bucket_for=self.replicas[0].bucket_for)
         self.router = RequestRouter(self.replicas, policy=policy,
@@ -417,6 +512,9 @@ class ServingFleet:
             for fr in self.router.last_shed_deadline:
                 self.metrics.record_shed(fr)
             self.metrics.sample_queue(self.router.depth)
+            self.metrics.sample_capacity(
+                sum(r.engine.kv_used_tokens() for r in self.replicas),
+                sum(r.engine.kv_capacity_tokens() for r in self.replicas))
 
             # 5) replicas with active slots begin their next decode step.
             for r in self.replicas:
@@ -472,7 +570,14 @@ class ServingFleet:
         return self.demand.weighted(self.replicas[0].prefill_exact_share)
 
     def summary(self) -> dict:
+        # Padding-waste totals live in the engines (the authoritative
+        # ledger); fold them into the metrics before summarizing.
+        self.metrics.prefill_true_tokens = sum(
+            r.engine.prefill_true_tokens for r in self.replicas)
+        self.metrics.prefill_padded_tokens = sum(
+            r.engine.prefill_padded_tokens for r in self.replicas)
         out = self.metrics.summary(tick_s=self.tick_s)
+        out["engine"] = self.engine_kind
         out["router"] = self.router.stats()
         out["demand"] = self.demand.stats()
         out["replicas"] = [r.stats() for r in self.replicas]

@@ -27,6 +27,14 @@ class FleetMetrics:
         self.queue_samples: list[int] = []
         self.tokens = 0
         self.makespan_s = 0.0
+        # padding-waste ledger: prompt tokens the engines actually needed vs
+        # tokens they computed (slot-engine prefill buckets pad; the paged
+        # engine's chunked prefill holds the two equal)
+        self.prefill_true_tokens = 0
+        self.prefill_padded_tokens = 0
+        # KV capacity samples: (rows holding tokens, rows reserved) per
+        # observation — stranded capacity is the gap between the two
+        self.capacity_samples: list[tuple[int, int]] = []
 
     def record_completion(self, req: FleetRequest, now: float) -> None:
         req.finished_s = now
@@ -39,6 +47,15 @@ class FleetMetrics:
 
     def sample_queue(self, depth: int) -> None:
         self.queue_samples.append(depth)
+
+    def record_padding(self, true_tokens: int, padded_tokens: int) -> None:
+        """Account one prefill: tokens the prompt needed vs tokens computed."""
+        self.prefill_true_tokens += true_tokens
+        self.prefill_padded_tokens += padded_tokens
+
+    def sample_capacity(self, used_tokens: int, capacity_tokens: int) -> None:
+        """Sample KV occupancy (summed across replicas) at an event point."""
+        self.capacity_samples.append((used_tokens, capacity_tokens))
 
     # -- summary ---------------------------------------------------------------
     def latencies(self) -> list[float]:
@@ -68,6 +85,19 @@ class FleetMetrics:
                               "p99": percentile(lats, 99) / tick_s},
             "queue_depth_max": max(qs) if qs else 0,
             "queue_depth_mean": sum(qs) / len(qs) if qs else 0.0,
+            # fraction of prefill compute spent on pad tokens (0.0 for the
+            # paged engine — chunked prefill never pads)
+            "padding_waste_frac": (
+                1.0 - self.prefill_true_tokens / self.prefill_padded_tokens
+                if self.prefill_padded_tokens else 0.0),
+            "kv_utilization_mean": (
+                sum(u / c for u, c in self.capacity_samples if c)
+                / len(self.capacity_samples) if self.capacity_samples else 0.0),
+            # reserved-but-empty KV rows, averaged over samples: capacity the
+            # fixed-slot layout strands that a paged pool can re-admit into
+            "stranded_capacity_frac": (
+                sum(1.0 - u / c for u, c in self.capacity_samples if c)
+                / len(self.capacity_samples) if self.capacity_samples else 0.0),
             "exact_share_at_admit_mean": (
                 sum(r.exact_share_at_admit for r in self.completed) / n_done
                 if n_done else 0.0),

@@ -11,6 +11,11 @@ boundaries by a :class:`DispatchPolicy`:
 ExecutionPlan` resolves the request's prefill bucket at the best tier
   (exact > transfer > static > default), ties broken by free slots — route
   work to the replica already holding the best schedules for its shape.
+  When a request carries a deadline and replicas expose ``expected_step_s``
+  (the paged replicas do), replicas whose projected completion time fits the
+  deadline outrank those whose does not, *before* tier quality is compared —
+  a fast-enough replica with a weaker plan beats a slow one with exact
+  schedules that would blow the deadline anyway.
 
 Requests whose deadline passed while queued are shed at dispatch time
 (``shed_deadline``); every arrival is recorded into the optional
@@ -49,7 +54,7 @@ class DispatchPolicy:
     name = "policy"
 
     def select(self, req: FleetRequest, replicas: Sequence,
-               eligible: Sequence[int]) -> int | None:
+               eligible: Sequence[int], *, now: float = 0.0) -> int | None:
         raise NotImplementedError
 
 
@@ -61,7 +66,7 @@ class RoundRobin(DispatchPolicy):
     def __init__(self) -> None:
         self._next = 0
 
-    def select(self, req, replicas, eligible):
+    def select(self, req, replicas, eligible, *, now=0.0):
         if not eligible:
             return None
         pool = set(eligible)
@@ -79,7 +84,7 @@ class LeastLoaded(DispatchPolicy):
 
     name = "least_loaded"
 
-    def select(self, req, replicas, eligible):
+    def select(self, req, replicas, eligible, *, now=0.0):
         if not eligible:
             return None
         return max(eligible, key=lambda i: (replicas[i].free_slots, -i))
@@ -87,15 +92,35 @@ class LeastLoaded(DispatchPolicy):
 
 class PlanAware(DispatchPolicy):
     """Prefer the replica whose plan resolves this prompt's prefill bucket
-    at the best tier; free slots break ties (then lowest index)."""
+    at the best tier; free slots break ties (then lowest index).
+
+    Deadline fit is the leading key: for a request with ``deadline_s``, a
+    replica exposing ``expected_step_s`` (its cost-model estimate for the
+    next iteration) is projected forward ``max_new_tokens`` steps from
+    ``now`` — replicas that land inside the deadline sort ahead of those
+    that do not.  Replicas without the gauge (the slot engine, test fakes)
+    are treated as fitting, which degrades to the pre-deadline ordering.
+    """
 
     name = "plan_aware"
 
-    def select(self, req, replicas, eligible):
+    @staticmethod
+    def _fits(req, replica, now: float) -> float:
+        if req.deadline_s is None:
+            return 1.0
+        step_s = getattr(replica, "expected_step_s", None)
+        if step_s is None:
+            return 1.0
+        step_s = step_s() if callable(step_s) else step_s
+        horizon = max(1, getattr(req, "max_new_tokens", 1))
+        return 1.0 if now + step_s * horizon <= req.deadline_s else 0.0
+
+    def select(self, req, replicas, eligible, *, now=0.0):
         if not eligible:
             return None
         return max(eligible,
-                   key=lambda i: (replicas[i].prefill_tier_score(len(req.prompt)),
+                   key=lambda i: (self._fits(req, replicas[i], now),
+                                  replicas[i].prefill_tier_score(len(req.prompt)),
                                   replicas[i].free_slots, -i))
 
 
@@ -209,7 +234,7 @@ class RequestRouter:
             else:
                 elig = [i for i, r in enumerate(self.replicas)
                         if r.free_slots > 0]
-            idx = self.policy.select(req, self.replicas, elig)
+            idx = self.policy.select(req, self.replicas, elig, now=now)
             if idx is None:
                 break
             self.queue.popleft()

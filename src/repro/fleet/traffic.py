@@ -73,7 +73,12 @@ class TrafficGenerator:
       requests draw uniform from ``long_lens``, the rest from
       ``short_lens``; lengths are clamped to ``prompt_cap``.  The skew makes
       one prefill bucket *hot*, which is what demand-driven tuning exploits.
-    * **New tokens** — uniform from ``new_tokens``.
+    * **New tokens** — uniform from ``new_tokens``; when
+      ``long_new_tokens`` is given, requests from the long prompt component
+      draw from it instead.  Coupling long prompts with long generations
+      makes the footprint distribution *long-tailed*: capacity must be
+      provisioned for the rare worst case while the typical request is much
+      smaller — the regime where paged KV memory pays off.
     * **Deadlines** — ``deadline_ticks`` ticks after arrival (None: never
       expire).
     """
@@ -84,6 +89,7 @@ class TrafficGenerator:
                  long_lens: tuple[int, int] = (16, 32),
                  long_frac: float = 0.25,
                  new_tokens: tuple[int, int] = (4, 8),
+                 long_new_tokens: tuple[int, int] | None = None,
                  deadline_ticks: float | None = None,
                  prompt_cap: int | None = None):
         if arrival_rate <= 0:
@@ -97,18 +103,23 @@ class TrafficGenerator:
         self.long_lens = long_lens
         self.long_frac = long_frac
         self.new_tokens = new_tokens
+        self.long_new_tokens = long_new_tokens
         self.deadline_ticks = deadline_ticks
         self.prompt_cap = prompt_cap
         self._uid = 0
         self._t = 0.0  # stream clock: carried across trace() calls
 
-    def _prompt_len(self) -> int:
-        lo, hi = (self.long_lens if self.rng.random() < self.long_frac
-                  else self.short_lens)
+    def _shape(self) -> tuple[int, int]:
+        """(prompt_len, max_new_tokens) for one request."""
+        long = self.rng.random() < self.long_frac
+        lo, hi = self.long_lens if long else self.short_lens
         n = int(self.rng.integers(lo, hi + 1))
         if self.prompt_cap is not None:
             n = min(n, self.prompt_cap)
-        return max(n, 1)
+        nt = (self.long_new_tokens if long and self.long_new_tokens is not None
+              else self.new_tokens)
+        mnt = int(self.rng.integers(nt[0], nt[1] + 1))
+        return max(n, 1), mnt
 
     def trace(self, n_requests: int) -> list[FleetRequest]:
         """``n_requests`` arrivals in order; repeated calls continue the
@@ -118,11 +129,9 @@ class TrafficGenerator:
         for _ in range(n_requests):
             self._t += float(self.rng.exponential(mean_gap))
             t = self._t
-            plen = self._prompt_len()
+            plen, mnt = self._shape()
             prompt = [int(x) for x in
                       self.rng.integers(1, self.vocab_size, size=plen)]
-            mnt = int(self.rng.integers(self.new_tokens[0],
-                                        self.new_tokens[1] + 1))
             deadline = (t + self.deadline_ticks * self.tick_s
                         if self.deadline_ticks is not None else None)
             self._uid += 1

@@ -16,6 +16,11 @@ full background-tuning path, just from a cold, donor-less store).
 ``--targets`` assigns per-replica hardware targets (comma-separated, cycled
 over replicas) for heterogeneous fleets; ``--donor-target`` draws transfer
 donors from another chip's namespace.
+
+``--engine paged`` swaps every replica to the paged-KV continuous-batching
+engine (``--decode-batch`` lanes over a ``--pool-pages`` x ``--page-size``
+KV pool, ``--chunk``-token prefill slices); ``--engine slot`` (default)
+keeps the fixed-slot engine.  See DESIGN.md §8.
 """
 from __future__ import annotations
 
@@ -47,8 +52,20 @@ def main(argv=None) -> dict:
                     help="admission-queue bound; overflow sheds")
     ap.add_argument("--prefetch", action="store_true",
                     help="demand-driven tuning prefetch for hot buckets")
+    ap.add_argument("--engine", choices=["slot", "paged"], default="slot",
+                    help="replica engine: fixed decode slots, or paged-KV "
+                         "continuous batching with chunked prefill")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--decode-batch", type=int, default=None,
+                    help="paged: decode lanes per replica (default: --slots)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="paged: tokens per KV page")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="paged: total KV pages per replica (default: every "
+                         "lane at full context)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="paged: prefill chunk length (tokens per step)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0,
                     help="traffic seed (same seed -> same trace)")
@@ -93,12 +110,18 @@ def main(argv=None) -> dict:
     names = [t.strip() for t in args.targets.split(",") if t.strip()]
     targets = [names[i % len(names)] for i in range(args.replicas)]
 
+    engine_kw = {}
+    if args.engine == "paged":
+        engine_kw = {"decode_batch": args.decode_batch,
+                     "page_size": args.page_size,
+                     "pool_pages": args.pool_pages, "chunk": args.chunk}
     fleet = ServingFleet(
         cfg, model, params, replicas=args.replicas, slots=args.slots,
-        max_len=args.max_len, registry=registry, policy=args.policy,
-        queue_cap=args.queue_cap, prefetch=args.prefetch, targets=targets,
+        max_len=args.max_len, engine=args.engine, registry=registry,
+        policy=args.policy, queue_cap=args.queue_cap,
+        prefetch=args.prefetch, targets=targets,
         donor_target=args.donor_target, tuning_budget_s=args.tuning_budget_s,
-        drain_jobs=args.drain_jobs, seed=args.seed, extras=extras)
+        drain_jobs=args.drain_jobs, seed=args.seed, extras=extras, **engine_kw)
     gen = TrafficGenerator(
         seed=args.seed, vocab_size=cfg.vocab_size,
         arrival_rate=args.arrival_rate, tick_s=fleet.tick_s,

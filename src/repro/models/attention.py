@@ -123,6 +123,105 @@ def attn_forward(p: dict, cfg: ArchConfig, x: jax.Array, kind: str, *,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill (a prompt slice against a partially filled cache)
+# ---------------------------------------------------------------------------
+
+
+def attn_chunk(p: dict, cfg: ArchConfig, x: jax.Array, kind: str, *,
+               positions: jax.Array, off: jax.Array, cache: dict,
+               provider=None) -> tuple[jax.Array, dict]:
+    """One prefill chunk: queries at absolute positions ``off .. off+C-1``
+    attend to the cache prefix (positions ``< off``) plus the chunk itself.
+
+    ``off`` may be a traced scalar — masks are position arithmetic, so one
+    trace per chunk *length* covers every offset.  Full-length caches get
+    the chunk spliced in before a causally masked pass over the whole
+    buffer; ring caches attend over [ring prefix ‖ chunk] with explicit
+    position masks and are updated *after* attention (pre-writing a chunk
+    into the ring would overwrite positions earlier in-chunk queries still
+    need).
+    """
+    b, s, _ = x.shape
+    off = jnp.asarray(off, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, provider)
+    q = jnp.swapaxes(q, 1, 2)  # (B, H, C, hd)
+    k = jnp.swapaxes(k, 1, 2)  # (B, KV, C, hd)
+    v = jnp.swapaxes(v, 1, 2)
+    q, k = _rope_qk(cfg, q, k, positions)
+
+    size = _cache_size(cache)
+    window = cfg.window if kind == "L" else 0
+    if kind == "G" or cfg.window == 0:
+        # Full-length buffer: splice the chunk at [off, off+C), then one
+        # causal pass over the whole buffer — positions beyond off+C hold
+        # garbage but the causal mask (kv_pos <= q_pos < off+C) hides them.
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, off, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, off, 0))
+        out = ops.flash_attention(
+            q, ck, cv,
+            class_id=_attn_class(cfg, kind),
+            causal=True, window=0,
+            softcap=cfg.attn_softcap if kind == "G" else 0.0,
+            q_offset=off, provider=provider,
+        )
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # Ring cache (slot convention p % size): reconstruct each slot's
+        # absolute position — the latest p < off congruent to the slot —
+        # and attend over [ring ‖ chunk] under causal+window+validity masks.
+        slots = jnp.arange(size)
+        ring_pos = off - 1 - jnp.mod(off - 1 - slots, size)  # < 0 -> unwritten
+        kv_pos = jnp.concatenate([ring_pos, off + jnp.arange(s)])
+        q_pos = off + jnp.arange(s)
+        ok = (kv_pos[None, :] >= 0) & (kv_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            ok = ok & (kv_pos[None, :] > q_pos[:, None] - window)
+        kk = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=2)
+        vv = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=2)
+        out = _masked_chunk_attention(q, kk, vv, ok, cfg,
+                                      softcap=cfg.attn_softcap if kind == "G" else 0.0)
+        # Write-after-attention: slot (off+i) % size takes position off+i;
+        # ascending i means later (newer) positions win on wrap.
+        if s >= size:
+            shift = jnp.mod(off + s, size)
+            new_cache = {
+                "k": jnp.roll(k[:, :, s - size:, :].astype(cache["k"].dtype),
+                              shift, axis=2),
+                "v": jnp.roll(v[:, :, s - size:, :].astype(cache["v"].dtype),
+                              shift, axis=2),
+            }
+        else:
+            wslots = jnp.mod(off + jnp.arange(s), size)
+            new_cache = {
+                "k": cache["k"].at[:, :, wslots, :].set(k.astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, :, wslots, :].set(v.astype(cache["v"].dtype)),
+            }
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    y = ops.matmul(out, p["wo"], provider=provider)
+    return y, new_cache
+
+
+def _masked_chunk_attention(q, k, v, valid_mask, cfg: ArchConfig,
+                            softcap: float = 0.0):
+    """Multi-query attention with an explicit (C, T) validity mask — the
+    chunk analogue of :func:`_masked_decode_attention` (ring semantics need
+    per-position masks the flash kernel's causal/window params can't say)."""
+    b, hq, c, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, c, d).astype(jnp.float32) * d ** -0.5
+    s = jnp.einsum("bhgqd,bhtd->bhgqt", qg, k.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid_mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bhtd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, c, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Decode (single token against cache)
 # ---------------------------------------------------------------------------
 

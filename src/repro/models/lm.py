@@ -60,9 +60,12 @@ def block_params(key: jax.Array, cfg: ArchConfig, kind: str) -> dict:
 
 def apply_block(p: dict, cfg: ArchConfig, kind: str, x: jax.Array, *,
                 positions: jax.Array | None, pos: jax.Array | None,
-                cache: dict | None, decode: bool, provider=None
-                ) -> tuple[jax.Array, dict | None, jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+                cache: dict | None, decode: bool, off: jax.Array | None = None,
+                provider=None) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Returns (x, new_cache, aux_loss).  ``off`` selects the chunked-prefill
+    attention path: the slice starts at absolute position ``off`` against a
+    partially filled cache (recurrent blocks already carry state through
+    their cache, so R layers need no separate chunk path)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "R":
         if cfg.family == "ssm":
@@ -79,6 +82,9 @@ def apply_block(p: dict, cfg: ArchConfig, kind: str, x: jax.Array, *,
     if decode:
         a, c = attn.attn_decode(p["attn"], cfg, xn, kind, pos=pos, cache=cache,
                                 provider=provider)
+    elif off is not None:
+        a, c = attn.attn_chunk(p["attn"], cfg, xn, kind, positions=positions,
+                               off=off, cache=cache, provider=provider)
     else:
         a, c = attn.attn_forward(p["attn"], cfg, xn, kind, positions=positions,
                                  cache=cache, provider=provider)
@@ -160,8 +166,10 @@ def _embed(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
 
 def _stack_pass(params: dict, cfg: ArchConfig, h: jax.Array, *,
                 positions: jax.Array, caches: dict | None, remat: bool,
-                provider=None) -> tuple[jax.Array, dict | None, jax.Array]:
-    """Run all layers. caches: {"groups": {i: stacked}, "tail": [...]} or None."""
+                off: jax.Array | None = None, provider=None
+                ) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Run all layers. caches: {"groups": {i: stacked}, "tail": [...]} or None.
+    ``off`` (with caches) runs the chunked-prefill path for attention layers."""
     pat, reps, tail = _pattern_split(cfg)
 
     def group_body(carry, xs):
@@ -172,7 +180,7 @@ def _stack_pass(params: dict, cfg: ArchConfig, h: jax.Array, *,
             c_in = layer_cache[str(i)] if layer_cache is not None else None
             hh, c_out, a = apply_block(layer_params[str(i)], cfg, kind, hh,
                                        positions=positions, pos=None, cache=c_in,
-                                       decode=False, provider=provider)
+                                       decode=False, off=off, provider=provider)
             aux = aux + a
             if c_out is not None:
                 new_cache[str(i)] = c_out
@@ -194,7 +202,7 @@ def _stack_pass(params: dict, cfg: ArchConfig, h: jax.Array, *,
         c_in = caches["tail"][j] if caches is not None else None
         h, c_out, a = apply_block(params["tail"][j], cfg, kind, h,
                                   positions=positions, pos=None, cache=c_in,
-                                  decode=False, provider=provider)
+                                  decode=False, off=off, provider=provider)
         aux = aux + a
         if caches is not None:
             new_caches["tail"].append(c_out)
@@ -291,6 +299,35 @@ def prefill(params: dict, cfg: ArchConfig, batch: dict, *, max_len: int,
         h_last = jax.lax.dynamic_slice_in_dim(h, t - 1, 1, axis=1)
     new_caches["t"] = jnp.full((b,), t, jnp.int32)
     h_last = apply_norm(params["final_norm"], h_last, cfg.norm)
+    logits = _lm_head(params, cfg, h_last, provider=provider)
+    return logits[:, 0, :], new_caches
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, cache: dict, tokens: jax.Array,
+                  off, *, provider=None) -> tuple[jax.Array, dict]:
+    """Process one prompt chunk against a partially filled cache.
+
+    ``tokens``: (B, C) — the prompt slice covering absolute positions
+    ``off .. off+C-1``; ``off`` may be traced, so one trace per chunk
+    *length* serves every offset (the paged engine always runs the final
+    chunk at its exact remainder length — no padding anywhere, which both
+    eliminates padding waste and keeps ring/recurrent state exact).
+
+    Returns (last-position logits (B, V), updated cache).  Calling with
+    ``off=0`` then successive offsets is numerically identical to one-shot
+    :func:`prefill` — the equivalence tests assert it bit-exactly.
+    """
+    if cfg.vision_tokens:
+        raise ValueError("chunked prefill does not support vision-prefix archs")
+    b, s = tokens.shape
+    off = jnp.asarray(off, jnp.int32)
+    h = _embed(params, cfg, tokens)
+    positions = jnp.broadcast_to(off + jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, new_caches, _ = _stack_pass(params, cfg, h, positions=positions,
+                                   caches=cache, remat=False, off=off,
+                                   provider=provider)
+    new_caches["t"] = jnp.full((b,), off + s, jnp.int32)
+    h_last = apply_norm(params["final_norm"], h[:, -1:, :], cfg.norm)
     logits = _lm_head(params, cfg, h_last, provider=provider)
     return logits[:, 0, :], new_caches
 

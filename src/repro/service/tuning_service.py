@@ -113,6 +113,9 @@ class TuningService:
         self._publish_lock = threading.Lock()
         self._jobs: dict[str, _Job] = {}
         self._attempted: set[str] = set()
+        #: workload keys in the order background jobs finished — the
+        #: observable priority-queue behavior (tests assert hot-first).
+        self.completed_order: list[str] = []
         self._job_seq = 0
         self._spent_s = 0.0
         self._probe_s = 0.0
@@ -231,7 +234,11 @@ class TuningService:
             self._jobs[key] = job
             self._counters["jobs_enqueued"] += 1
             if self._pool is not None:
-                job.future = self._pool.submit(self._run_job, key)
+                # The worker claims the best *unstarted* job at run time
+                # rather than being bound to this key: a priority queue in
+                # front of the pool, so prefetch promotions reorder work
+                # that was submitted earlier but has not started yet.
+                job.future = self._pool.submit(self._run_job)
             return True
 
     def prefetch(self, instance: KernelInstance, *,
@@ -240,10 +247,11 @@ class TuningService:
         a serving miss.
 
         Fleets call this for the hottest unresolved shapes so upgrades land
-        before demand peaks.  ``priority`` orders the deferred drain queue
-        (higher first; FIFO within a priority) — in threaded mode it is
-        advisory, since the pool runs jobs in submission order.  Returns
-        True when a job for the workload is pending.
+        before demand peaks.  ``priority`` orders both the deferred drain
+        queue and the threaded pool (higher first; FIFO within a priority):
+        workers claim the highest-priority unstarted job when a pool slot
+        frees up, so a promotion reorders queued work in either mode.
+        Returns True when a job for the workload is pending.
         """
         with self._lock:
             self._counters["prefetches"] += 1
@@ -258,27 +266,47 @@ class TuningService:
         return [j.instance.workload_key() for j in jobs]
 
     def cancel_pending(self) -> int:
-        """Drop queued jobs that have not started (deferred mode only —
-        pool-submitted jobs run regardless).
+        """Drop queued jobs that have not started.
 
-        The workloads are *not* marked attempted: a later lookup or
-        prefetch may legitimately re-enqueue them.  Callers shutting down
-        (e.g. a fleet at end of trace) use this so ``close()``'s drain does
-        not spend search budget tuning shapes nobody is waiting for.
+        Works in both modes: threaded workers claim jobs under the lock, so
+        removing an unstarted job here means no worker will ever run it (its
+        already-submitted future completes as a no-op).  The workloads are
+        *not* marked attempted: a later lookup or prefetch may legitimately
+        re-enqueue them.  Callers shutting down (e.g. a fleet at end of
+        trace) use this so ``close()``'s drain does not spend search budget
+        tuning shapes nobody is waiting for.
         """
         with self._lock:
-            keys = [k for k, j in self._jobs.items()
-                    if j.future is None and not j.started]
+            keys = [k for k, j in self._jobs.items() if not j.started]
             for k in keys:
                 del self._jobs[k]
             self._counters["jobs_cancelled"] += len(keys)
         return len(keys)
 
-    def _run_job(self, key: str) -> bool:
+    def _claim_best_locked(self) -> str | None:
+        """Highest-priority unstarted workload key (FIFO within a priority).
+        Caller holds ``_lock``."""
+        best = None
+        for k, j in self._jobs.items():
+            if j.started:
+                continue
+            cand = (-j.priority, j.seq, k)
+            if best is None or cand < best:
+                best = cand
+        return best[2] if best is not None else None
+
+    def _run_job(self, key: str | None = None) -> bool:
         """Transfer-tune one missed workload and publish an upgrade.
 
-        Returns True when a better schedule was published."""
+        ``key=None`` (threaded workers) claims the best unstarted job under
+        the lock — claim and mark-started are one critical section, so two
+        workers can never pick the same job and none is orphaned.  Returns
+        True when a better schedule was published."""
         with self._lock:
+            if key is None:
+                key = self._claim_best_locked()
+                if key is None:
+                    return False
             job = self._jobs.get(key)
             if job is None or job.started:
                 return False
@@ -307,6 +335,7 @@ class TuningService:
                                           k.chosen_from)
             with self._lock:
                 self._counters["jobs_completed"] += 1
+                self.completed_order.append(key)
             return published
         except Exception:
             with self._lock:

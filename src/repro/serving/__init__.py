@@ -1,3 +1,6 @@
 from repro.serving.engine import Request, ServingEngine, SlotsFull
+from repro.serving.paged import PagedServingEngine
+from repro.serving.pages import PagesExhausted, PageTable
 
-__all__ = ["Request", "ServingEngine", "SlotsFull"]
+__all__ = ["PagedServingEngine", "PageTable", "PagesExhausted", "Request",
+           "ServingEngine", "SlotsFull"]

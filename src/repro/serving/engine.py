@@ -30,6 +30,17 @@ Two serving-cost refinements live here:
 This is the TPU-idiomatic shape of continuous batching for fixed-size
 caches; ring buffers (windowed layers) and recurrent states come from the
 model substrate unchanged.
+
+**Retirement path**: :class:`~repro.serving.paged.PagedServingEngine`
+supersedes this engine for LM serving — iteration-level admission, a paged
+KV pool, and chunked (padding-free) prefill remove the two structural
+costs measured here (power-of-two prefill padding waste and prefill
+head-of-line blocking; see ``benchmarks/bench_paged.py``).  The slot engine
+remains the baseline the paged bench compares against, the reference
+semantics for the equivalence tests, and the fallback for families the
+paged path does not cover (audio encoder-decoder, vision-prefixed
+prompts).  New serving features should land in the paged engine; this
+engine is frozen apart from bug fixes.
 """
 from __future__ import annotations
 
@@ -84,6 +95,10 @@ class ServingEngine:
         self._bucket_cap = (max_len if (cfg.window == 0 or "L" not in kinds)
                             else min(cfg.window, max_len))
         self._prefill_lengths: set[int] = set()  # distinct padded lengths traced
+        # padding-waste ledger: true prompt tokens vs padded tokens computed
+        # (the paged engine's chunked prefill holds these equal)
+        self.prefill_true_tokens = 0
+        self.prefill_padded_tokens = 0
 
         # Execution plan: pre-resolve the decode batch + prefill buckets.
         self.provider = provider
@@ -163,6 +178,17 @@ class ServingEngine:
         """Fraction of decode slots occupied (0.0 idle .. 1.0 full)."""
         return len(self.active) / self.slots
 
+    # -- capacity gauges (comparable with the paged engine's) ------------------
+    def kv_used_tokens(self) -> int:
+        """Cache positions actually holding tokens across active slots."""
+        return sum(len(r.prompt) + len(r.generated) - 1
+                   for r in self.active.values())
+
+    def kv_capacity_tokens(self) -> int:
+        """Every slot reserves max_len rows whether used or not — the
+        stranded-capacity denominator."""
+        return self.slots * self.max_len
+
     # -- request admission ---------------------------------------------------
     def add_request(self, prompt: list[int], max_new_tokens: int = 16,
                     eos_id: int | None = None) -> Request:
@@ -185,6 +211,8 @@ class ServingEngine:
         req = Request(self._uid, list(prompt), max_new_tokens, eos_id)
         pad = self._pad_len(n)
         self._prefill_lengths.add(pad)
+        self.prefill_true_tokens += n
+        self.prefill_padded_tokens += pad
         toks = req.prompt + [0] * (pad - n)
         batch = {"tokens": jnp.asarray([toks], jnp.int32)}
         for k, v in self.extras.items():
@@ -193,7 +221,8 @@ class ServingEngine:
                                        jnp.asarray(n, jnp.int32))
         tok = int(jnp.argmax(logits[0]))
         req.generated.append(tok)
-        if max_new_tokens <= 0 or (eos_id is not None and tok == eos_id):
+        if max_new_tokens <= 0 or (eos_id is not None and tok == eos_id) or \
+                len(req.generated) >= max_new_tokens:
             # The prefill token is the whole response: the slot stays free
             # (its cache rows are overwritten by the next admission).
             req.done = True
@@ -249,7 +278,7 @@ class ServingEngine:
             tok = int(nxt[slot])
             req.generated.append(tok)
             if (req.eos_id is not None and tok == req.eos_id) or \
-                    len(req.generated) > req.max_new_tokens:
+                    len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 finished.append(req)
                 del self.active[slot]

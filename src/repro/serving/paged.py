@@ -1,0 +1,574 @@
+"""Iteration-level continuous batching over a paged KV cache.
+
+The :class:`PagedServingEngine` replaces the slot engine's fixed batch with
+a lane/page design:
+
+* **Lanes** — ``decode_batch`` decode lanes share one batched cache, as in
+  the slot engine, but requests flow through lanes at *iteration* (decode
+  step) granularity: every :meth:`step` admits waiting requests into free
+  lanes, advances prefills by one chunk each, decodes every decoding lane,
+  and retires finished requests — no request ever blocks behind another's
+  prefill, and a freed lane is reusable on the very next step.
+* **Pages** — the full-length KV leaves (the length-scaling memory) live in
+  one flat pool of fixed-size pages (:class:`~repro.serving.pages.PageTable`)
+  instead of per-lane ``max_ctx`` strips.  A request holds exactly
+  ``ceil(tokens / page_size)`` pages at any instant, so memory tracks the
+  *actual* context in flight rather than the worst case; decode gathers each
+  lane's pages into a dense per-lane view (numerically identical to a
+  contiguous cache — the equivalence tests assert bit-exact logits) and
+  scatters back only the one newly written row.  Ring (windowed) caches and
+  recurrent state are O(window)/O(1) per lane and stay dense lane strips.
+* **Chunked prefill** — prompts advance ``chunk`` tokens per step,
+  interleaved with decode.  The final chunk always runs at its exact
+  remainder length: no padding anywhere (the slot engine's power-of-two
+  buckets padded up to 2x), and exact-length chunks are what keep ring and
+  recurrent state correct.  Trace count is bounded by ``chunk`` distinct
+  chunk lengths.
+* **Preemption** — when the pool cannot grow a decoding request, the
+  youngest decoding request is evicted: its pages are freed and it is
+  re-queued at the *front* of the waiting queue with recompute-on-resume
+  (prompt + generated so far re-prefilled, the pending token re-fed), the
+  vLLM recompute idiom.
+
+Execution plans key on (decode-batch, page-size):
+:func:`~repro.core.resolution.plan_serving_paged` freezes the paged decode
+cell plus one ``chunk_prefill`` cell per chunk length, and the engine
+re-plans at step boundaries exactly like the slot engine.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.resolution import ExecutionPlan, plan_serving_paged
+from repro.models.build import Model
+from repro.serving.engine import Request, SlotsFull
+from repro.serving.pages import PagesExhausted, PageTable
+
+
+class PagedServingEngine:
+    """Continuous-batching engine over a paged KV pool.
+
+    ``max_ctx`` is the per-request context bound (prompt + generation);
+    ``pool_pages`` bounds *total* tokens in flight across all lanes
+    (default: enough for every lane at full context — no preemption unless
+    oversubscribed on purpose).
+    """
+
+    def __init__(self, model: Model, params: Any, *, decode_batch: int,
+                 max_ctx: int, page_size: int = 8, pool_pages: int | None = None,
+                 chunk: int = 8, chunks_per_step: int | None = None,
+                 admit_cap: int | None = None, provider=None,
+                 plan: ExecutionPlan | None = None,
+                 record_logits: bool = False):
+        cfg = model.cfg
+        if model.prefill_chunk is None or cfg.family == "audio":
+            raise ValueError(f"paged serving does not support {cfg.family!r}")
+        if cfg.vision_tokens:
+            raise ValueError("paged serving does not support vision-prefix archs")
+        if max_ctx % page_size:
+            raise ValueError("max_ctx must be a multiple of page_size")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.decode_batch = decode_batch
+        self.max_ctx = max_ctx
+        self.page_size = page_size
+        self.chunk = max(1, min(chunk, max_ctx))
+        self.chunks_per_step = (chunks_per_step if chunks_per_step is not None
+                                else max(2, decode_batch // 4))
+        self.admit_cap = admit_cap if admit_cap is not None else 2 * decode_batch
+        self.pages_per_seq = max_ctx // page_size
+        if pool_pages is None:
+            pool_pages = decode_batch * self.pages_per_seq + 1  # +1: trash
+        self.table = PageTable(pool_pages, page_size)
+        self.record_logits = record_logits
+
+        # ---- cache leaf classification (shape probes, no allocation) -------
+        probe_a = jax.eval_shape(lambda: model.init_cache(2, max_ctx))
+        probe_b = jax.eval_shape(lambda: model.init_cache(3, max_ctx))
+        probe_c = jax.eval_shape(lambda: model.init_cache(2, max_ctx - 1))
+        la_, self._treedef = jax.tree_util.tree_flatten(probe_a)
+        lb_ = jax.tree_util.tree_leaves(probe_b)
+        lc_ = jax.tree_util.tree_leaves(probe_c)
+        self._info: list[tuple[int, int | None]] = []
+        for a, b, c in zip(la_, lb_, lc_):
+            ba = next(i for i in range(a.ndim) if a.shape[i] != b.shape[i])
+            diff = [i for i in range(a.ndim) if a.shape[i] != c.shape[i]]
+            self._info.append((ba, diff[0] if diff else None))
+
+        # ---- storage: paged leaves -> pool-flat, lane leaves -> dense -----
+        dense = jax.tree_util.tree_leaves(model.init_cache(decode_batch, max_ctx))
+        rows = pool_pages * page_size
+        self.leaves: list[jax.Array] = []
+        for leaf, (ba, la) in zip(dense, self._info):
+            if la is None:
+                self.leaves.append(leaf)
+            else:
+                shape = list(leaf.shape)
+                del shape[ba]
+                shape[self._pool_axis(ba, la)] = rows
+                self.leaves.append(jnp.zeros(shape, leaf.dtype))
+
+        # ---- host-side request state --------------------------------------
+        self.waiting: deque[Request] = deque()
+        self.lanes: list[Request | None] = [None] * decode_batch
+        self._prefill_fifo: list[int] = []   # uids in admission order
+        self._off: dict[int, int] = {}       # uid -> prefill progress (tokens)
+        self._ctx: dict[int, int] = {}       # uid -> cache positions written
+        self._ptoks: dict[int, list[int]] = {}   # uid -> tokens to prefill
+        self._skip_emit: set[int] = set()    # resumed victims: no re-emit
+        self._uid = 0
+        self._traced_chunk_lens: set[int] = set()
+        self.last_logits = None
+        self.chunk_logits: dict[int, np.ndarray] = {}
+        self.preemptions = 0
+        self.prefill_true_tokens = 0
+        self.prefill_padded_tokens = 0       # == true: chunked prefill pads nothing
+
+        # ---- execution plan ------------------------------------------------
+        self.provider = provider
+        self.plan = plan
+        self.replans = 0
+        self.plan_history: list[tuple[int, int]] = []
+        self._steps = 0
+        if provider is not None and getattr(provider, "pipeline", None) is not None:
+            if self.plan is None:
+                self.plan = plan_serving_paged(
+                    cfg, provider.pipeline, decode_batch=decode_batch,
+                    page_size=page_size, pages_per_seq=self.pages_per_seq,
+                    chunk_lens=tuple(range(1, self.chunk + 1)))
+            provider.plan = self.plan
+        self._make_fns()
+
+    # ------------------------------------------------------------------
+    # jitted entry points
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _pool_axis(ba: int, la: int) -> int:
+        """Length axis of the pool-flat leaf (dense leaf minus batch axis)."""
+        return la - 1 if ba < la else la
+
+    def _make_fns(self) -> None:
+        """(Re)build jitted fns; called at init and after every re-plan."""
+        model, provider, info = self.model, self.provider, self._info
+        treedef, B = self._treedef, self.decode_batch
+        pool_axis = self._pool_axis
+
+        def gather(leaf, idx, ba, la):
+            """Pool leaf + (..., T) row indices -> dense leaf rows."""
+            pa = pool_axis(ba, la)
+            taken = jnp.take(leaf, idx, axis=pa)
+            return taken, pa
+
+        def decode_fn(params, leaves, toks, idx, rows, active):
+            dense = []
+            for leaf, (ba, la) in zip(leaves, info):
+                if la is None:
+                    dense.append(leaf)
+                else:
+                    taken, pa = gather(leaf, idx, ba, la)  # (B, T) at pa
+                    dense.append(jnp.moveaxis(taken, (pa, pa + 1), (ba, la)))
+            cache = jax.tree_util.tree_unflatten(treedef, dense)
+            pos = cache["t"]
+            logits, new_cache = model.decode_step(params, cache, toks,
+                                                  provider=provider)
+            new_dense = jax.tree_util.tree_leaves(new_cache)
+            out = []
+            for leaf, new, (ba, la) in zip(leaves, new_dense, info):
+                if la is None:
+                    mshape = [1] * leaf.ndim
+                    mshape[ba] = B
+                    mask = active.reshape(mshape)
+                    out.append(jnp.where(mask, new.astype(leaf.dtype), leaf))
+                else:
+                    pa = pool_axis(ba, la)
+                    dn = jnp.moveaxis(new, (ba, la), (0, 1))   # (B, T, *rest)
+                    rowvals = dn[jnp.arange(B), pos]           # (B, *rest)
+                    pm = jnp.moveaxis(leaf, pa, 0)
+                    # inactive lanes carry rows == 0: garbage lands on the
+                    # trash page, which nothing ever attends to
+                    pm = pm.at[rows].set(rowvals.astype(leaf.dtype))
+                    out.append(jnp.moveaxis(pm, 0, pa))
+            return logits, out
+
+        def chunk_fn(params, leaves, toks, off, lane, idx_lane):
+            C = toks.shape[1]
+            view = []
+            for leaf, (ba, la) in zip(leaves, info):
+                if la is None:
+                    view.append(jax.lax.dynamic_slice_in_dim(leaf, lane, 1,
+                                                             axis=ba))
+                else:
+                    taken, pa = gather(leaf, idx_lane, ba, la)
+                    view.append(jnp.expand_dims(taken, ba))
+            cache = jax.tree_util.tree_unflatten(treedef, view)
+            logits, new_cache = model.prefill_chunk(params, cache, toks, off,
+                                                    provider=provider)
+            new_view = jax.tree_util.tree_leaves(new_cache)
+            out = []
+            for leaf, new, (ba, la) in zip(leaves, new_view, info):
+                if la is None:
+                    out.append(jax.lax.dynamic_update_slice_in_dim(
+                        leaf, new.astype(leaf.dtype), lane, axis=ba))
+                else:
+                    pa = pool_axis(ba, la)
+                    dn = jnp.moveaxis(new, (ba, la), (0, 1))[0]  # (T, *rest)
+                    vals = jax.lax.dynamic_slice_in_dim(dn, off, C, axis=0)
+                    rows_c = jax.lax.dynamic_slice(idx_lane, (off,), (C,))
+                    pm = jnp.moveaxis(leaf, pa, 0)
+                    pm = pm.at[rows_c].set(vals.astype(leaf.dtype))
+                    out.append(jnp.moveaxis(pm, 0, pa))
+            return logits[0], out
+
+        def reset_fn(leaves, lane):
+            """Zero one lane's strip of every lane leaf (fresh recurrent /
+            ring state for a new occupant; paged rows need no reset — the
+            causal masks never read beyond what a request has written)."""
+            out = []
+            for leaf, (ba, la) in zip(leaves, info):
+                if la is None:
+                    zero_shape = list(leaf.shape)
+                    zero_shape[ba] = 1
+                    out.append(jax.lax.dynamic_update_slice_in_dim(
+                        leaf, jnp.zeros(zero_shape, leaf.dtype), lane, axis=ba))
+                else:
+                    out.append(leaf)
+            return out
+
+        self._decode = jax.jit(decode_fn)
+        self._chunk = jax.jit(chunk_fn)   # one trace per chunk length
+        self._reset = jax.jit(reset_fn)
+
+    # ------------------------------------------------------------------
+    # admission surfaces (router-compatible)
+    # ------------------------------------------------------------------
+    @property
+    def active(self) -> dict[int, Request]:
+        """All in-flight requests (waiting + laned), keyed by uid — truthy
+        whenever the engine has work, mirroring the slot engine contract."""
+        out = {r.uid: r for r in self.lanes if r is not None}
+        out.update({r.uid: r for r in self.waiting})
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.waiting) + sum(1 for r in self.lanes if r is not None)
+
+    @property
+    def free_slots(self) -> int:
+        """Admission headroom (queue slots, not lanes: lanes turn over every
+        iteration, so admission capacity is what routers should see)."""
+        return max(0, self.admit_cap - self.in_flight)
+
+    def utilization(self) -> float:
+        """Fraction of the page pool held — the real memory pressure gauge."""
+        return self.table.used_pages / self.table.usable_pages
+
+    def kv_used_tokens(self) -> int:
+        return sum(self._ctx.get(r.uid, 0)
+                   for r in self.lanes if r is not None)
+
+    def kv_capacity_tokens(self) -> int:
+        return self.table.capacity_tokens
+
+    def bucket_for(self, prompt_len: int) -> int:
+        """Chunk length a prompt of this length mostly runs at (demand
+        trackers and routers key on it; no padding is implied)."""
+        return min(max(prompt_len, 1), self.chunk)
+
+    @property
+    def prefill_trace_count(self) -> int:
+        """Distinct chunk lengths traced — bounded by ``chunk``."""
+        return len(self._traced_chunk_lens)
+
+    # ------------------------------------------------------------------
+    # request admission
+    # ------------------------------------------------------------------
+    def add_request(self, prompt: list[int], max_new_tokens: int = 16,
+                    eos_id: int | None = None) -> Request:
+        """Enqueue a request; prefill happens chunk-by-chunk inside
+        :meth:`step` (no synchronous work here — admission is O(1)).
+
+        Raises :class:`SlotsFull` at the admission cap and ``ValueError``
+        for a request the pool can never hold.
+        """
+        n = len(prompt)
+        if n < 1:
+            raise ValueError("empty prompt")
+        total = n + max(max_new_tokens, 0)
+        if total > self.max_ctx:
+            raise ValueError(
+                f"prompt {n} + max_new_tokens {max_new_tokens} exceeds "
+                f"max_ctx {self.max_ctx} (per-request max_len)")
+        if self.table.pages_for(total) > self.table.usable_pages:
+            raise ValueError(
+                f"request needs {self.table.pages_for(total)} pages; pool "
+                f"has {self.table.usable_pages}")
+        if self.in_flight >= self.admit_cap:
+            raise SlotsFull(
+                f"admission cap {self.admit_cap} reached")
+        self._uid += 1
+        req = Request(self._uid, list(prompt), max_new_tokens, eos_id)
+        self.waiting.append(req)
+        self._ptoks[req.uid] = list(prompt)
+        return req
+
+    # ------------------------------------------------------------------
+    # scheduling (pure: both the step executor and the fleet cost preview)
+    # ------------------------------------------------------------------
+    def _schedule(self) -> dict:
+        """Decide this iteration's work from current state, deterministically.
+
+        Returns admits / chunks / decode lanes / preemptions.  Page
+        feasibility is *simulated* against the live table so execution
+        (which allocates in the same order) can never hit
+        :class:`PagesExhausted` unexpectedly.  Called by :meth:`step` right
+        before executing and by :meth:`planned_work` for the fleet's cost
+        model — same state, same answer.
+        """
+        held = {uid: len(self.table.pages(uid)) for uid in self.table.holders()}
+        sim_free = self.table.free_pages
+        pages_for = self.table.pages_for
+
+        # Admission gate (the vLLM watermark idiom): only admit when the
+        # pool can hold the request's whole prompt on top of worst-case
+        # decode growth this step — admitting into a pool that cannot feed
+        # the prefill just converts the new request into preemption churn.
+        admits: list[tuple[Request, int]] = []
+        free_lanes = [i for i, r in enumerate(self.lanes) if r is None]
+        admit_free = sim_free - sum(1 for r in self.lanes if r is not None)
+        for lane, req in zip(free_lanes, self.waiting):
+            need = pages_for(len(self._ptoks[req.uid]))
+            if need > admit_free:
+                break  # FIFO: later arrivals do not jump the page queue
+            admit_free -= need
+            admits.append((req, lane))
+
+        # prefill chunks: strict FIFO, bounded per step
+        prefilling: list[Request] = []
+        by_uid = {r.uid: r for r in self.lanes if r is not None}
+        for uid in self._prefill_fifo:
+            r = by_uid.get(uid)
+            if r is not None and self._off[uid] < len(self._ptoks[uid]):
+                prefilling.append(r)
+        prefilling.extend(r for r, _ in admits)
+        chunks: list[tuple[int, int, int, bool]] = []
+        budget = self.chunks_per_step
+        for r in prefilling:
+            if budget <= 0:
+                break
+            off = self._off.get(r.uid, 0)
+            n = len(self._ptoks[r.uid])
+            # Shrink the chunk to what the pool can hold right now: a
+            # partial chunk keeps a long prefill moving under page pressure
+            # instead of head-of-line blocking every prefill behind it
+            # (chunked prefill is exact at any split point).
+            cap = (held.get(r.uid, 0) + sim_free) * self.page_size - off
+            c = min(self.chunk, n - off, cap)
+            if c <= 0:
+                continue  # no pages for even one token: skip, not stall
+            need = pages_for(off + c) - held.get(r.uid, 0)
+            sim_free -= max(need, 0)
+            held[r.uid] = held.get(r.uid, 0) + max(need, 0)
+            chunks.append((r.uid, off, c, off + c >= n))
+            budget -= 1
+
+        # decode lanes + page-pressure preemption (evict youngest decoders)
+        chunk_uids = {c[0] for c in chunks}
+        decoders = [r for r in self.lanes
+                    if r is not None and r.uid not in chunk_uids
+                    and self._off.get(r.uid, 0) >= len(self._ptoks[r.uid])]
+        needs = {r.uid: pages_for(self._ctx[r.uid] + 1) - held.get(r.uid, 0)
+                 for r in decoders}
+        preempts: list[int] = []
+        total_need = sum(max(v, 0) for v in needs.values())
+        if total_need > sim_free:
+            for victim in sorted(decoders, key=lambda r: -r.uid):
+                preempts.append(victim.uid)
+                sim_free += held.get(victim.uid, 0)
+                total_need -= max(needs[victim.uid], 0)
+                if total_need <= sim_free:
+                    break
+        decode_uids = [r.uid for r in decoders if r.uid not in preempts]
+
+        # deadlock breaker: >= 2 prefilling holders, none can grow, nothing
+        # decoding to release pages naturally -> evict the youngest holder
+        stall_preempts: list[int] = []
+        if not chunks and not decode_uids and not preempts and prefilling:
+            holders = [r for r in prefilling if held.get(r.uid, 0) > 0]
+            if len(holders) > 1:
+                stall_preempts.append(max(h.uid for h in holders))
+        return {"admits": admits, "chunks": chunks,
+                "decode_uids": decode_uids, "preempts": preempts,
+                "stall_preempts": stall_preempts}
+
+    def planned_work(self) -> dict:
+        """Preview of the next :meth:`step`'s work for external cost models:
+        chunk lengths to run, whether a batched decode runs, and admissions."""
+        acts = self._schedule()
+        return {
+            "chunk_lens": [c for _, _, c, _ in acts["chunks"]],
+            "decode": bool(acts["decode_uids"]),
+            "decode_lanes": len(acts["decode_uids"]),
+            "admits": len(acts["admits"]),
+            "preempts": len(acts["preempts"]) + len(acts["stall_preempts"]),
+        }
+
+    # ------------------------------------------------------------------
+    # plan upkeep (identical contract to the slot engine)
+    # ------------------------------------------------------------------
+    def _maybe_replan(self) -> None:
+        if self.plan is None or self.provider is None:
+            return
+        if self.provider.pipeline.generation() == self.plan.generation:
+            return
+        self.plan = self.plan.refresh(self.provider.pipeline)
+        self.provider.plan = self.plan
+        self.replans += 1
+        self._make_fns()
+
+    def refresh_plan(self) -> bool:
+        before = self.replans
+        self._maybe_replan()
+        return self.replans != before
+
+    # ------------------------------------------------------------------
+    # the iteration
+    # ------------------------------------------------------------------
+    def _preempt(self, uid: int) -> None:
+        """Evict a request: free pages, requeue at the FRONT of waiting with
+        recompute-on-resume (re-prefill prompt + tokens so far; the pending
+        token is re-fed, not re-emitted)."""
+        lane = next(i for i, r in enumerate(self.lanes)
+                    if r is not None and r.uid == uid)
+        req = self.lanes[lane]
+        self.lanes[lane] = None
+        self.table.release(uid)
+        if uid in self._prefill_fifo:
+            self._prefill_fifo.remove(uid)
+        self._off.pop(uid, None)
+        self._ctx.pop(uid, None)
+        if req.generated:
+            self._ptoks[uid] = req.prompt + req.generated[:-1]
+            self._skip_emit.add(uid)
+        else:
+            self._ptoks[uid] = list(req.prompt)
+        self.waiting.appendleft(req)
+        self.preemptions += 1
+
+    def _release(self, req: Request) -> None:
+        uid = req.uid
+        lane = next(i for i, r in enumerate(self.lanes)
+                    if r is not None and r.uid == uid)
+        self.lanes[lane] = None
+        self.table.release(uid)
+        if uid in self._prefill_fifo:
+            self._prefill_fifo.remove(uid)
+        self._off.pop(uid, None)
+        self._ctx.pop(uid, None)
+        self._ptoks.pop(uid, None)
+        self._skip_emit.discard(uid)
+
+    def step(self) -> list[Request]:
+        """One iteration: admit, one prefill chunk each (bounded), one
+        batched decode over decoding lanes.  Returns finished requests."""
+        self._maybe_replan()
+        if not self.in_flight:
+            return []
+        self._steps += 1
+        if self.plan is not None and (
+                not self.plan_history
+                or self.plan_history[-1][1] != self.plan.generation):
+            self.plan_history.append((self._steps, self.plan.generation))
+
+        acts = self._schedule()
+        finished: list[Request] = []
+
+        for req, lane in acts["admits"]:
+            assert self.waiting and self.waiting[0] is req
+            self.waiting.popleft()
+            self.lanes[lane] = req
+            self._prefill_fifo.append(req.uid)
+            self._off[req.uid] = 0
+            self._ctx[req.uid] = 0
+            self.leaves = self._reset(self.leaves, lane)
+
+        for uid, off, c, final in acts["chunks"]:
+            self.table.ensure(uid, off + c)   # simulation guarantees success
+            req = next(r for r in self.lanes if r is not None and r.uid == uid)
+            lane = self.lanes.index(req)
+            toks = self._ptoks[uid][off:off + c]
+            idx_lane = jnp.asarray(self.table.flat_rows(uid, self.max_ctx))
+            self._traced_chunk_lens.add(c)
+            logits, self.leaves = self._chunk(
+                self.params, self.leaves,
+                jnp.asarray([toks], jnp.int32), jnp.asarray(off, jnp.int32),
+                jnp.asarray(lane, jnp.int32), idx_lane)
+            self._off[uid] = off + c
+            self._ctx[uid] = off + c
+            self.prefill_true_tokens += c
+            self.prefill_padded_tokens += c   # exact-length: zero waste
+            if final:
+                if uid in self._skip_emit:
+                    self._skip_emit.discard(uid)   # resume: token already held
+                else:
+                    tok = int(jnp.argmax(logits))
+                    if self.record_logits:
+                        self.chunk_logits[uid] = np.asarray(logits)
+                    req.generated.append(tok)
+                    if req.max_new_tokens <= 0 or (
+                            req.eos_id is not None and tok == req.eos_id) or \
+                            len(req.generated) >= req.max_new_tokens:
+                        req.done = True
+                        finished.append(req)
+                        self._release(req)
+
+        for uid in acts["preempts"] + acts["stall_preempts"]:
+            self._preempt(uid)
+
+        decode_uids = [u for u in acts["decode_uids"]]
+        if decode_uids:
+            B = self.decode_batch
+            toks = np.zeros(B, np.int32)
+            idx = np.zeros((B, self.max_ctx), np.int32)
+            rows = np.zeros(B, np.int32)
+            active = np.zeros(B, bool)
+            lanes_decoding = []
+            for lane, req in enumerate(self.lanes):
+                if req is None or req.uid not in decode_uids:
+                    continue
+                uid, ctx = req.uid, self._ctx[req.uid]
+                self.table.ensure(uid, ctx + 1)
+                pages = self.table.pages(uid)
+                toks[lane] = req.generated[-1]
+                idx[lane] = self.table.flat_rows(uid, self.max_ctx)
+                rows[lane] = (pages[ctx // self.page_size] * self.page_size
+                              + ctx % self.page_size)
+                active[lane] = True
+                lanes_decoding.append((lane, req))
+            logits, self.leaves = self._decode(
+                self.params, self.leaves, jnp.asarray(toks),
+                jnp.asarray(idx), jnp.asarray(rows), jnp.asarray(active))
+            self.last_logits = logits
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for lane, req in lanes_decoding:
+                tok = int(nxt[lane])
+                req.generated.append(tok)
+                self._ctx[req.uid] += 1
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    finished.append(req)
+                    self._release(req)
+        return finished
+
+    def run_to_completion(self, max_steps: int = 4096) -> None:
+        for _ in range(max_steps):
+            if not self.in_flight:
+                break
+            self.step()

@@ -106,6 +106,23 @@ def test_plan_aware_prefers_best_tier_score():
     assert [idx for _, idx in out] == [1, 1, 2]
 
 
+def test_plan_aware_deadline_fit_overrides_tier_score():
+    """A replica whose expected next-step time cannot finish the request
+    before its deadline loses to a slower-scheduled one that can; replicas
+    without the gauge (plain slot engines) are assumed to fit."""
+    fast = FakeReplica(free=2, score=0.0)
+    fast.expected_step_s = lambda: 1.0
+    slow = FakeReplica(free=2, score=5.0)
+    slow.expected_step_s = lambda: 100.0
+    router = RequestRouter([slow, fast], policy="plan_aware", queue_cap=4)
+    # mnt=2, deadline 50s out: slow projects 200s (misses), fast 2s (fits)
+    router.submit(_req(1, arrival=0.0, deadline=50.0))
+    assert [idx for _, idx in router.dispatch(now=0.0)] == [1]
+    # no deadline: the tier score decides again, as before
+    router.submit(_req(2))
+    assert [idx for _, idx in router.dispatch(now=0.0)] == [0]
+
+
 def test_unknown_policy_rejected():
     with pytest.raises(KeyError, match="unknown dispatch policy"):
         make_policy("best_effort")
@@ -268,3 +285,38 @@ def test_fleet_serves_a_trace_end_to_end(small_lm, tmp_path):
     for r in summary["replicas"]:
         assert r["requests"] >= 0 and "plan_tiers" in r
     fleet.close()
+
+
+def test_paged_fleet_serves_a_trace_end_to_end(small_lm, tmp_path):
+    """engine="paged" swaps the replica engine under the same serve loop:
+    every request completes or sheds, plans propagate without divergence,
+    and the paged gauges hold (zero padding, live page utilization)."""
+    cfg, model, params = small_lm
+    registry = ScheduleRegistry(str(tmp_path / "reg"))
+    fleet = ServingFleet(cfg, model, params, replicas=2, slots=2, max_len=32,
+                         engine="paged", decode_batch=4, page_size=4,
+                         pool_pages=2 * 32 // 4 + 1, chunk=8,
+                         registry=registry, policy="plan_aware", queue_cap=8)
+    gen = TrafficGenerator(seed=3, vocab_size=cfg.vocab_size,
+                           arrival_rate=1.5, tick_s=fleet.tick_s,
+                           short_lens=(3, 6), long_lens=(8, 12),
+                           new_tokens=(2, 4), prompt_cap=12)
+    summary = fleet.serve(gen.trace(12))
+    assert summary["engine"] == "paged"
+    assert summary["completed"] + summary["shed"] == 12
+    assert summary["completed"] > 0
+    assert summary["schedule_mismatches"] == 0
+    assert summary["padding_waste_frac"] == 0.0
+    assert 0.0 < summary["kv_utilization_mean"] <= 1.0
+    for r in summary["replicas"]:
+        assert r["engine"] == "paged"
+        assert r["preemptions"] >= 0
+    fleet.close()
+
+
+def test_fleet_rejects_unknown_engine(small_lm, tmp_path):
+    cfg, model, params = small_lm
+    with pytest.raises(ValueError, match="engine"):
+        ServingFleet(cfg, model, params, replicas=1, slots=2, max_len=32,
+                     engine="warp",
+                     registry=ScheduleRegistry(str(tmp_path / "reg")))

@@ -99,6 +99,17 @@ def test_continuous_equals_solo(small_lm):
     np.testing.assert_allclose(joint_logits, solo_logits, rtol=2e-4, atol=2e-4)
 
 
+def test_max_new_tokens_is_exact(small_lm):
+    """``max_new_tokens=N`` yields exactly N tokens, counting the free
+    prefill token — pins the historical off-by-one that emitted N+1."""
+    cfg, model, params = small_lm
+    eng = ServingEngine(model, params, slots=1, max_len=32)
+    for n in (1, 2, 5):
+        r = eng.add_request([1, 2, 3], max_new_tokens=n)
+        eng.run_to_completion()
+        assert r.done and len(r.generated) == n
+
+
 def test_eos_stops_early(small_lm):
     cfg, model, params = small_lm
     eng = ServingEngine(model, params, slots=1, max_len=32)
@@ -212,4 +223,4 @@ def test_windowed_arch_serving():
     # prompt + generation longer than the (reduced, 8) window: ring must wrap
     r = eng.add_request(list(np.arange(1, 13)), max_new_tokens=12)
     eng.run_to_completion(max_steps=64)
-    assert r.done and len(r.generated) == 13
+    assert r.done and len(r.generated) == 12

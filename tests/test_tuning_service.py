@@ -228,3 +228,23 @@ def test_stats_shape(registry):
     assert s["exact_hit_rate"] == 0.5
     assert s["in_flight"] == 1
     assert s["probe_search_s"] > 0
+
+
+def test_threaded_pool_claims_highest_priority_first(registry):
+    """max_workers=1 with the lone worker blocked: jobs enqueued while the
+    pool is busy are claimed priority-first (FIFO within a priority), not
+    submission order — ``completed_order`` makes the claim order observable."""
+    svc = make_service(registry, max_workers=1, probe_candidates=0)
+    gate = threading.Event()
+    svc._pool.submit(gate.wait)          # occupy the only worker
+    a = KernelInstance.make("matmul", M=192, N=192, K=192)
+    b = KernelInstance.make("matmul", M=224, N=224, K=224)
+    c = KernelInstance.make("matmul", M=288, N=288, K=288)
+    assert svc.prefetch(a, priority=0.0)
+    assert svc.prefetch(b, priority=0.0)
+    assert svc.prefetch(c, priority=5.0)  # enqueued last, must run first
+    gate.set()
+    svc.close()
+    keys = [a.workload_key(), b.workload_key(), c.workload_key()]
+    order = [k for k in svc.completed_order if k in keys]
+    assert order == [keys[2], keys[0], keys[1]]
