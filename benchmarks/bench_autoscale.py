@@ -1,0 +1,236 @@
+"""Elastic-fleet benchmark: autoscaling vs fixed replica counts on bursts.
+
+Four configurations serve the *same* seeded bursty trace (square-wave load:
+a low base rate punctuated by periodic bursts) against identical copies of
+a donor-seeded schedule registry:
+
+1. **elastic** — starts at 1 replica, an :class:`~repro.fleet.Autoscaler`
+   warm-joins up to ``max_replicas`` during bursts and drain-retires back
+   down between them;
+2. **fixed-1 / fixed-2** — the fixed fleets the elastic one is formally
+   compared against;
+3. **fixed-max** — always at the elastic ceiling: the over-provisioned
+   reference (burst-grade quality paid for all the time).
+
+Claims checked (the PR's acceptance criteria):
+
+* the elastic fleet beats every compared fixed size on p99 latency AND
+  shed rate, while spending no more *replica-seconds* than fixed-2 — the
+  equal-capacity-cost comparison;
+* >= 2 scale-ups and >= 2 scale-downs fire across the bursts, with zero
+  dropped requests (every submitted request completes or is accounted
+  shed) and zero cross-replica schedule byte-mismatches;
+* every warm-joined replica boots at >= the fleet's pre-join exact-tier
+  share — the shared registry is what makes scale-up cheap (a cold-booted
+  replica would serve default-tier schedules until tuning caught up).
+
+Per-phase windows (burst vs base, via
+:meth:`~repro.fleet.FleetMetrics.window_summaries` +
+:meth:`~repro.fleet.BurstyTraffic.phase_at`) land in the JSON so the report
+shows *where* the win comes from: the burst phases.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+
+import jax
+
+from benchmarks import common
+from repro.configs import get_arch, reduced
+from repro.core.tuner import tune_arch_registry
+from repro.fleet import Autoscaler, BurstyTraffic, ServingFleet
+from repro.models import build_model
+from repro.service import ScheduleRegistry
+
+#: Burst geometry is in ticks (1 tick = one untuned decode step).  The burst
+#: rate is sized to overwhelm one replica (queue -> shed) and strain two,
+#: while the autoscaler's window/cooldown let it ride up and back down twice
+#: within the trace.  ``compare`` lists the fixed sizes the elastic run must
+#: beat; ``max_replicas`` doubles as the over-provisioned reference size.
+PRESETS = {
+    "smoke": {"arch": "minitron-4b", "donors": ["internvl2-26b"],
+              "trials": 256, "slots": 2, "max_len": 32,
+              "requests": 56, "queue_cap": 8,
+              "base_rate": 0.25, "burst_rate": 1.8,
+              "burst_every_ticks": 48.0, "burst_len_ticks": 10.0,
+              "offset_ticks": 6.0,
+              "short_lens": (3, 6), "long_lens": (10, 16),
+              "long_frac": 0.35, "new_tokens": (2, 4),
+              "compare": [1, 2], "max_replicas": 3,
+              "window_ticks": 2.0, "cooldown_ticks": 3.0,
+              "up_windows": 1, "down_windows": 4,
+              "queue_high": 0.75, "util_low": 0.55, "queue_low": 0.75,
+              "drain_jobs": 1, "drain_every": 8, "seed": 0},
+    "full": {"arch": "minitron-4b", "donors": ["internvl2-26b",
+                                               "starcoder2-7b"],
+             "trials": 768, "slots": 2, "max_len": 64,
+             "requests": 120, "queue_cap": 10,
+             "base_rate": 0.25, "burst_rate": 2.0,
+             "burst_every_ticks": 56.0, "burst_len_ticks": 12.0,
+             "offset_ticks": 6.0,
+             "short_lens": (3, 8), "long_lens": (16, 24),
+             "long_frac": 0.35, "new_tokens": (2, 5),
+             "compare": [1, 2], "max_replicas": 3,
+             "window_ticks": 2.0, "cooldown_ticks": 3.0,
+             "up_windows": 1, "down_windows": 4,
+             "queue_high": 0.75, "util_low": 0.55, "queue_low": 0.75,
+             "drain_jobs": 1, "drain_every": 8, "seed": 0},
+}
+
+
+def _make_fleet(p: dict, base_registry: str, scratch: str, name: str, *,
+                replicas: int, model, params, cfg) -> ServingFleet:
+    root = os.path.join(scratch, name)
+    shutil.copytree(base_registry, root)
+    return ServingFleet(cfg, model, params, replicas=replicas,
+                        slots=p["slots"], max_len=p["max_len"],
+                        registry=ScheduleRegistry(root),
+                        policy="least_loaded", queue_cap=p["queue_cap"],
+                        prefetch=True, drain_jobs=p["drain_jobs"],
+                        drain_every=p["drain_every"], seed=p["seed"])
+
+
+def _trace_gen(p: dict, cfg, tick_s: float) -> BurstyTraffic:
+    return BurstyTraffic(seed=p["seed"], vocab_size=cfg.vocab_size,
+                         arrival_rate=p["base_rate"],
+                         burst_rate=p["burst_rate"],
+                         burst_every_ticks=p["burst_every_ticks"],
+                         burst_len_ticks=p["burst_len_ticks"],
+                         offset_ticks=p["offset_ticks"], tick_s=tick_s,
+                         short_lens=tuple(p["short_lens"]),
+                         long_lens=tuple(p["long_lens"]),
+                         long_frac=p["long_frac"],
+                         new_tokens=tuple(p["new_tokens"]),
+                         prompt_cap=p["max_len"] // 2)
+
+
+def _phase_windows(fleet: ServingFleet, gen: BurstyTraffic) -> dict:
+    """p95/shed aggregated per traffic phase (burst vs base windows)."""
+    out = {"burst": {"p95_s": 0.0, "shed": 0, "completed": 0},
+           "base": {"p95_s": 0.0, "shed": 0, "completed": 0}}
+    for w in fleet.metrics.window_summaries(4.0 * fleet.tick_s):
+        phase = gen.phase_at((w["t0"] + w["t1"]) / 2.0)
+        out[phase]["shed"] += w["shed"]
+        out[phase]["completed"] += w["completed"]
+        out[phase]["p95_s"] = max(out[phase]["p95_s"], w["latency_s"]["p95"])
+    return out
+
+
+def _run(p: dict, base: str, scratch: str, name: str, *, replicas: int,
+         elastic: bool, model, params, cfg) -> dict:
+    fleet = _make_fleet(p, base, scratch, name, replicas=replicas,
+                        model=model, params=params, cfg=cfg)
+    if elastic:
+        fleet.attach_autoscaler(Autoscaler(
+            min_replicas=1, max_replicas=p["max_replicas"],
+            window_s=p["window_ticks"] * fleet.tick_s,
+            cooldown_s=p["cooldown_ticks"] * fleet.tick_s,
+            up_windows=p["up_windows"], down_windows=p["down_windows"],
+            queue_high=p["queue_high"], util_low=p["util_low"],
+            queue_low=p["queue_low"]))
+    gen = _trace_gen(p, cfg, fleet.tick_s)
+    try:
+        summary = fleet.serve(gen.trace(p["requests"]))
+        summary["phases"] = _phase_windows(fleet, gen)
+    finally:
+        fleet.close()
+    summary["config"] = {"replicas": replicas, "elastic": elastic}
+    return summary
+
+
+def run(preset: str = "smoke") -> list[tuple]:
+    p = PRESETS[preset]
+    cfg = reduced(get_arch(p["arch"]))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = p["requests"]
+
+    scratch = tempfile.mkdtemp(prefix="autoscale-bench-")
+    base = os.path.join(scratch, "base-registry")
+    try:
+        registry = ScheduleRegistry(base)
+        for donor in p["donors"]:
+            tune_arch_registry(registry, donor, common.SHAPE, dp=common.DP,
+                               tp=common.TP, total_trials=p["trials"],
+                               seed=common.SEED)
+
+        elastic = _run(p, base, scratch, "elastic", replicas=1, elastic=True,
+                       model=model, params=params, cfg=cfg)
+        fixed = {k: _run(p, base, scratch, f"fixed-{k}", replicas=k,
+                         elastic=False, model=model, params=params, cfg=cfg)
+                 for k in sorted(set(p["compare"]) | {p["max_replicas"]})}
+
+        joins = [e for e in elastic["scale_events"] if e["action"] == "join"]
+        retires = [e for e in elastic["scale_events"]
+                   if e["action"] == "retire"]
+        warm = all(e["join_exact_share"] >= e["pre_join_exact_share"]
+                   for e in joins)
+        drops = sum(n - (s["completed"] + s["shed"])
+                    for s in [elastic, *fixed.values()])
+        mismatches = sum(s["schedule_mismatches"]
+                         for s in [elastic, *fixed.values()])
+        budget_ref = fixed[max(p["compare"])]
+        beats = all(
+            elastic["latency_ticks"]["p99"] < fixed[k]["latency_ticks"]["p99"]
+            and elastic["shed_rate"] <= fixed[k]["shed_rate"]
+            for k in p["compare"])
+        sheds_less = elastic["shed_rate"] < fixed[min(p["compare"])]["shed_rate"]
+        within_budget = (elastic["replica_seconds"]
+                         <= budget_ref["replica_seconds"] * 1.001)
+        ok = (beats and sheds_less and within_budget and warm
+              and len(joins) >= 2 and len(retires) >= 2
+              and drops == 0 and mismatches == 0)
+
+        rows = [("autoscale/elastic_p99_ticks",
+                 round(elastic["latency_ticks"]["p99"], 1),
+                 f"shed_rate={elastic['shed_rate']:.2f} "
+                 f"ups={len(joins)} downs={len(retires)} "
+                 f"replica_s={elastic['replica_seconds']:.3g}")]
+        for k, s in sorted(fixed.items()):
+            ref = " (reference)" if k not in p["compare"] else ""
+            rows.append((f"autoscale/fixed{k}_p99_ticks",
+                         round(s["latency_ticks"]["p99"], 1),
+                         f"shed_rate={s['shed_rate']:.2f} "
+                         f"replica_s={s['replica_seconds']:.3g}{ref}"))
+        worst = max(p["compare"],
+                    key=lambda k: fixed[k]["latency_ticks"]["p99"])
+        rows.append(
+            ("autoscale/elastic_win",
+             round(fixed[worst]["latency_ticks"]["p99"]
+                   / max(elastic["latency_ticks"]["p99"], 1e-9), 2),
+             f"beats fixed {p['compare']} on p99+shed at <= fixed-"
+             f"{max(p['compare'])} replica-seconds, warm_joins={warm}, "
+             f"drops={drops}, mismatches={mismatches}: "
+             f"{'PASS' if ok else 'FAIL'}"))
+        common.save_result("autoscale", {
+            "preset": preset,
+            "arch": p["arch"],
+            "donors": p["donors"],
+            "trace": {"requests": n, "base_rate": p["base_rate"],
+                      "burst_rate": p["burst_rate"],
+                      "burst_every_ticks": p["burst_every_ticks"],
+                      "burst_len_ticks": p["burst_len_ticks"],
+                      "seed": p["seed"]},
+            "elastic": elastic,
+            "fixed": {str(k): v for k, v in fixed.items()},
+            "scale_ups": len(joins),
+            "scale_downs": len(retires),
+            "warm_joins_ok": warm,
+            "dropped_requests": drops,
+            "schedule_mismatches": mismatches,
+            "pass": ok,
+        })
+        return rows
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    args = ap.parse_args()
+    common.emit(run(args.preset),
+                "Elastic fleet — autoscaling vs fixed sizes on bursty load")

@@ -13,6 +13,7 @@ from benchmarks import common
 
 def main() -> None:
     from benchmarks import (
+        bench_autoscale,
         bench_fleet,
         bench_full_tuning,
         bench_gemm_transfer,
@@ -46,6 +47,7 @@ def main() -> None:
         ("Execution-plan resolution pipeline", bench_resolution),
         ("Serving fleet: router + demand-driven tuning", bench_fleet),
         ("Paged continuous batching vs fixed slots", bench_paged),
+        ("Elastic autoscaling fleet vs fixed sizes", bench_autoscale),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

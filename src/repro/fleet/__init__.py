@@ -2,12 +2,15 @@
 
 A request front-end over N :class:`~repro.serving.ServingEngine` replicas:
 
-    traffic.py ..... seeded synthetic request streams (Poisson, mixed shapes)
+    traffic.py ..... seeded request streams (Poisson, bursty, diurnal, replay)
     router.py ...... bounded admission queue + pluggable dispatch policies
-    demand.py ...... per-bucket arrival counts driving demand-driven tuning
-    metrics.py ..... latency percentiles, throughput, queue/shed telemetry
+    demand.py ...... decayed per-bucket arrival counts driving tuning order
+    metrics.py ..... latency percentiles, windowed telemetry, shed accounting
+    autoscale.py ... hysteresis autoscaler over the windowed telemetry
     fleet.py ....... replicas + shared-registry propagation + the serve loop
+                     + elastic lifecycle (warm-join / drain-retire)
 """
+from repro.fleet.autoscale import Autoscaler, ScaleDecision
 from repro.fleet.demand import DemandTracker
 from repro.fleet.fleet import PagedReplica, Replica, ServingFleet
 from repro.fleet.metrics import FleetMetrics, percentile
@@ -22,11 +25,23 @@ from repro.fleet.router import (
     make_policy,
     register_policy,
 )
-from repro.fleet.traffic import FleetRequest, TrafficGenerator, sample_prompts
+from repro.fleet.traffic import (
+    BurstyTraffic,
+    DiurnalTraffic,
+    FleetRequest,
+    TrafficGenerator,
+    VariableRateTraffic,
+    load_trace,
+    sample_prompts,
+    save_trace,
+)
 
 __all__ = [
+    "Autoscaler",
+    "BurstyTraffic",
     "DemandTracker",
     "DispatchPolicy",
+    "DiurnalTraffic",
     "FleetMetrics",
     "FleetRequest",
     "LeastLoaded",
@@ -37,10 +52,14 @@ __all__ = [
     "Replica",
     "RequestRouter",
     "RoundRobin",
+    "ScaleDecision",
     "ServingFleet",
     "TrafficGenerator",
+    "VariableRateTraffic",
+    "load_trace",
     "make_policy",
     "percentile",
     "register_policy",
     "sample_prompts",
+    "save_trace",
 ]

@@ -7,6 +7,13 @@ exact matters.  :class:`DemandTracker` aggregates what the router actually
 sees — arrival counts keyed by prefill bucket — and ranks buckets hottest
 first, so the fleet can prefetch tuning jobs for the shapes traffic is
 hitting *now* while cold shapes never spend budget.
+
+With ``half_life_s`` set, counts decay exponentially in *virtual seconds*
+(each arrival's weight halves every ``half_life_s`` of trace time), so the
+ranking tracks current traffic: a bucket that was hot an hour ago no longer
+outranks the bucket that is hot now.  This is the signal both prefetch
+priority and the autoscaler's demand view consume — without decay, a load
+shift would keep tuning (and scaling for) yesterday's shapes.
 """
 from __future__ import annotations
 
@@ -14,6 +21,10 @@ import collections
 from typing import Callable
 
 from repro.fleet.traffic import FleetRequest
+
+#: Decayed weights below this are dropped from the table entirely: a bucket
+#: that has not seen traffic for many half-lives stops being demand at all.
+_EPS = 1e-9
 
 
 class DemandTracker:
@@ -23,25 +34,49 @@ class DemandTracker:
     reference replica's :meth:`~repro.serving.ServingEngine.bucket_for`, so
     demand is keyed exactly the way the engines pad and the plans resolve.
     Without one, the raw prompt length is the bucket.
+
+    ``half_life_s``: when set, every count decays by ``0.5 ** (dt /
+    half_life_s)`` as the stream clock (the latest ``arrival_s`` seen)
+    advances ``dt`` virtual seconds.  ``None`` (default) keeps exact integer
+    counts that never decay.
     """
 
-    def __init__(self, bucket_for: "Callable[[int], int] | None" = None):
+    def __init__(self, bucket_for: "Callable[[int], int] | None" = None, *,
+                 half_life_s: float | None = None):
+        if half_life_s is not None and half_life_s <= 0:
+            raise ValueError("half_life_s must be positive")
         self.bucket_for = bucket_for
+        self.half_life_s = half_life_s
         self.counts: collections.Counter[int] = collections.Counter()
+        self._now = 0.0  # stream clock: the latest arrival time seen
+
+    def _decay_to(self, t: float) -> None:
+        """Advance the stream clock to ``t``, decaying every bucket."""
+        if self.half_life_s is None or t <= self._now:
+            return
+        factor = 0.5 ** ((t - self._now) / self.half_life_s)
+        self._now = t
+        for b in list(self.counts):
+            v = self.counts[b] * factor
+            if v < _EPS:
+                del self.counts[b]
+            else:
+                self.counts[b] = v
 
     def record(self, req: FleetRequest) -> int:
         """Count one arrival; stamps and returns the request's bucket."""
         n = len(req.prompt)
         bucket = self.bucket_for(n) if self.bucket_for is not None else n
         req.bucket = bucket
+        self._decay_to(req.arrival_s)
         self.counts[bucket] += 1
         return bucket
 
     @property
-    def total(self) -> int:
+    def total(self) -> float:
         return sum(self.counts.values())
 
-    def hottest(self) -> list[tuple[int, int]]:
+    def hottest(self) -> list[tuple[int, float]]:
         """(bucket, count) pairs, hottest first (ties: smaller bucket)."""
         return sorted(self.counts.items(), key=lambda kv: (-kv[1], kv[0]))
 
@@ -54,4 +89,6 @@ class DemandTracker:
 
     def stats(self) -> dict:
         return {"total": self.total,
-                "buckets": {str(b): c for b, c in self.hottest()}}
+                "half_life_s": self.half_life_s,
+                "buckets": {str(b): round(c, 4) if self.half_life_s else c
+                            for b, c in self.hottest()}}

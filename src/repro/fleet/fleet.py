@@ -31,6 +31,15 @@ targets (``targets=[...]`` from :mod:`repro.targets`): replicas sharing a
 target share a TuningService (one namespace), targets never leak into each
 other, and ``donor_target`` lets e.g. edge replicas transfer from the
 server-tuned pool.
+
+The replica set is *elastic* (DESIGN.md §9): :meth:`ServingFleet.\
+add_replica` warm-joins a replica whose plan resolves at the current shared
+registry generation (it inherits every published exact-tier schedule before
+its first request), :meth:`ServingFleet.retire_replica` drain-retires one
+(no new dispatch, in-flight work finishes, engine-queued work is re-routed,
+pending tuning jobs are cancelled), and an attached
+:class:`~repro.fleet.autoscale.Autoscaler` drives both from windowed
+telemetry inside :meth:`ServingFleet.serve`.
 """
 from __future__ import annotations
 
@@ -74,6 +83,12 @@ class Replica:
         self.busy = False
         self.step_pending = False
         self.requests_admitted = 0
+        # Lifecycle: active (serving) -> draining (no new dispatch, in-flight
+        # finishing) -> retired (empty, clock stopped).  Indices are stable:
+        # a retired replica keeps its slot in the fleet's list.
+        self.state = "active"
+        self.joined_s = 0.0
+        self.retired_s: float | None = None
         self._runner = (service.runner if service is not None
                         else CachedRunner(AnalyticalRunner(target)))
         self._mode = service.mode if service is not None else "strict"
@@ -97,6 +112,11 @@ class Replica:
     @property
     def free_slots(self) -> int:
         return self.engine.free_slots
+
+    @property
+    def dispatchable(self) -> bool:
+        """Whether the router may send *new* work here (active only)."""
+        return self.state == "active"
 
     def utilization(self) -> float:
         return self.engine.utilization()
@@ -217,6 +237,9 @@ class Replica:
         plan = self.engine.plan
         return {
             "target": self.target,
+            "state": self.state,
+            "joined_s": self.joined_s,
+            "retired_s": self.retired_s,
             "requests": self.requests_admitted,
             "replans": self.engine.replans,
             "utilization": self.utilization(),
@@ -290,6 +313,7 @@ class PagedReplica(Replica):
         out = super().stats()
         out["engine"] = "paged"
         out["preemptions"] = self.engine.preemptions
+        out["defrags"] = self.engine.defrags
         out["page_utilization"] = self.engine.utilization()
         return out
 
@@ -319,6 +343,7 @@ class ServingFleet:
                  page_size: int = 8, pool_pages: int | None = None,
                  chunk: int = 8, chunks_per_step: int | None = None,
                  admit_cap: int | None = None,
+                 defrag_threshold: float | None = None,
                  registry=None, policy: str = "round_robin",
                  queue_cap: int = 32, prefetch: bool = False,
                  prefetch_buckets: int = 2,
@@ -327,6 +352,7 @@ class ServingFleet:
                  donors: Sequence[str] | None = None,
                  tuning_budget_s: float = float("inf"),
                  drain_jobs: int = 2, drain_every: int = 4,
+                 autoscaler=None, min_replicas: int = 1,
                  seed: int = 0, extras: dict | None = None):
         if engine not in ("slot", "paged"):
             raise ValueError(f"unknown engine {engine!r}: 'slot' or 'paged'")
@@ -339,6 +365,19 @@ class ServingFleet:
         self.prefetch_buckets = prefetch_buckets
         self.drain_jobs = drain_jobs
         self.drain_every = drain_every
+        self.autoscaler = autoscaler
+        self.min_replicas = (autoscaler.min_replicas if autoscaler is not None
+                             else max(1, min_replicas))
+        # Everything _make_replica needs to construct a warm-joining replica
+        # identical (module, engine geometry) to the boot-time ones.
+        self._mk = dict(model=model, params=params, slots=slots,
+                        max_len=max_len, decode_batch=decode_batch,
+                        page_size=page_size, pool_pages=pool_pages,
+                        chunk=chunk, chunks_per_step=chunks_per_step,
+                        admit_cap=admit_cap,
+                        defrag_threshold=defrag_threshold, extras=extras)
+        self._svc_kw = dict(seed=seed, budget_s=tuning_budget_s,
+                            donor_target=donor_target, donors=donors)
 
         if targets is None:
             targets = [DEFAULT_TARGET] * replicas
@@ -350,36 +389,12 @@ class ServingFleet:
                 raise ValueError(
                     f"targets ({len(targets)}) must match replicas ({replicas})")
 
-        # One TuningService per distinct target, all over the one registry.
+        # One TuningService per distinct target, all over the one registry
+        # (created on demand — a warm-join may bring a brand-new target).
         self._services: dict[str, Any] = {}
-        if registry is not None:
-            from repro.service import TuningService  # lazy: optional dep cycle
-            for t in dict.fromkeys(targets):
-                self._services[t] = TuningService(
-                    registry, model_id=f"fleet/{cfg.name}",
-                    runner=CachedRunner(AnalyticalRunner(t)),
-                    max_workers=0, probe_candidates=0, seed=seed,
-                    budget_s=tuning_budget_s, target=t,
-                    donor_target=donor_target, donors=donors)
-
         self.replicas: list[Replica] = []
         for i, t in enumerate(targets):
-            svc = self._services.get(t)
-            provider = (ScheduleProvider(service=svc) if svc is not None
-                        else ScheduleProvider(target=t))
-            if engine == "paged":
-                eng = PagedServingEngine(
-                    model, params, decode_batch=decode_batch or slots,
-                    max_ctx=max_len, page_size=page_size,
-                    pool_pages=pool_pages, chunk=chunk,
-                    chunks_per_step=chunks_per_step, admit_cap=admit_cap,
-                    provider=provider)
-                self.replicas.append(PagedReplica(i, cfg, eng, svc, t))
-            else:
-                eng = ServingEngine(model, params, slots=slots,
-                                    max_len=max_len, extras=extras,
-                                    provider=provider)
-                self.replicas.append(Replica(i, cfg, eng, svc, t))
+            self.replicas.append(self._make_replica(i, t))
 
         self.demand = DemandTracker(bucket_for=self.replicas[0].bucket_for)
         self.router = RequestRouter(self.replicas, policy=policy,
@@ -390,13 +405,183 @@ class ServingFleet:
         self.tick_s = self.replicas[0].untuned_decode_cost()
         self.prefetched: list[str] = []   # workload keys, in prefetch order
         self._prefetched_seen: set[str] = set()
+        #: Lifecycle audit trail: one dict per warm-join / retire.
+        self.scale_events: list[dict] = []
         self._events = 0
         self._now = 0.0
+        self._next_eval: float | None = None
+        if autoscaler is not None:
+            self.attach_autoscaler(autoscaler)
+
+    def attach_autoscaler(self, autoscaler) -> None:
+        """Attach (or replace) the autoscaler driving :meth:`serve`.
+
+        Callers typically construct the fleet first — :attr:`tick_s` (one
+        untuned decode step) is only known then — and size the controller's
+        ``window_s``/``cooldown_s`` in ticks of it.
+        """
+        self.autoscaler = autoscaler
+        self.min_replicas = autoscaler.min_replicas
+        self._next_eval = self._now + autoscaler.window_s
+
+    # -- replica construction --------------------------------------------------
+    def _service_for(self, target: str):
+        """The shared TuningService for ``target`` (created on first use)."""
+        if self.registry is None:
+            return None
+        svc = self._services.get(target)
+        if svc is None:
+            from repro.service import TuningService  # lazy: optional dep cycle
+            svc = self._services[target] = TuningService(
+                self.registry, model_id=f"fleet/{self.cfg.name}",
+                runner=CachedRunner(AnalyticalRunner(target)),
+                max_workers=0, probe_candidates=0, target=target,
+                **self._svc_kw)
+        return svc
+
+    def _make_replica(self, idx: int, target: str) -> Replica:
+        """Construct one replica (engine + provider) for ``target``.
+
+        The engine builds its :class:`~repro.core.resolution.ExecutionPlan`
+        at the *current* registry generation — for a warm-join this is the
+        whole point: every shape the fleet already tuned resolves at the
+        exact tier before the replica sees its first request.
+        """
+        mk = self._mk
+        svc = self._service_for(target)
+        provider = (ScheduleProvider(service=svc) if svc is not None
+                    else ScheduleProvider(target=target))
+        if self.engine_kind == "paged":
+            eng = PagedServingEngine(
+                mk["model"], mk["params"],
+                decode_batch=mk["decode_batch"] or mk["slots"],
+                max_ctx=mk["max_len"], page_size=mk["page_size"],
+                pool_pages=mk["pool_pages"], chunk=mk["chunk"],
+                chunks_per_step=mk["chunks_per_step"],
+                admit_cap=mk["admit_cap"],
+                defrag_threshold=mk["defrag_threshold"],
+                provider=provider)
+            return PagedReplica(idx, self.cfg, eng, svc, target)
+        eng = ServingEngine(mk["model"], mk["params"], slots=mk["slots"],
+                            max_len=mk["max_len"], extras=mk["extras"],
+                            provider=provider)
+        return Replica(idx, self.cfg, eng, svc, target)
 
     @property
     def services(self) -> dict:
         """Per-target shared TuningServices (empty without a registry)."""
         return dict(self._services)
+
+    # -- lifecycle views -------------------------------------------------------
+    def live_replicas(self) -> list[Replica]:
+        """Replicas that still hold or may hold work (active + draining)."""
+        return [r for r in self.replicas if r.state != "retired"]
+
+    def active_replicas(self) -> list[Replica]:
+        return [r for r in self.replicas if r.state == "active"]
+
+    # -- elastic lifecycle -----------------------------------------------------
+    def add_replica(self, target: str | None = None, *,
+                    now: float | None = None) -> Replica:
+        """Warm-join a new replica and register it with the router.
+
+        The join order is the contract: (1) construct the replica — its
+        execution plan resolves at the *current* shared-registry generation,
+        so every shape the fleet already tuned is exact-tier from request
+        one; (2) prefetch tuning for whatever the demand distribution says
+        is hot but still unresolved on this target; (3) only then register
+        with the router.  The recorded scale event carries the fleet's
+        traffic-weighted exact-tier share just before the join and the new
+        replica's share at join, so "warm" is measurable, not asserted.
+        """
+        now = self._now if now is None else now
+        t = target_name(target) if target is not None else self.replicas[0].target
+        self.sync_plans()  # compare shares at one registry generation
+        pre_share = self._final_exact_share_synced()
+        r = self._make_replica(len(self.replicas), t)
+        r.joined_s = now
+        r.time = now
+        if self._services and self.demand.total > 0:
+            self._prefetch_uses(r.decode_uses, float(self.demand.total))
+            for bucket, count in self.demand.hottest()[:self.prefetch_buckets]:
+                self._prefetch_uses(r.prefill_uses(bucket), float(count))
+        join_share = (self.demand.weighted(r.prefill_exact_share)
+                      if self._services else 0.0)
+        self.replicas.append(r)
+        self.router.add_replica(r)
+        self.scale_events.append({
+            "t": now, "action": "join", "replica": r.idx, "target": t,
+            "pre_join_exact_share": pre_share,
+            "join_exact_share": join_share})
+        return r
+
+    def retire_replica(self, idx: int, *, now: float | None = None) -> Replica:
+        """Drain-retire a replica: stop dispatch, finish in-flight work.
+
+        Refused (ValueError) when it would leave fewer than
+        ``min_replicas`` active replicas.  Work the engine accepted but has
+        not started (the paged engine's waiting queue) is withdrawn and
+        requeued at the router front — nothing accepted is ever dropped.
+        In-flight requests keep decoding through the normal serve loop; the
+        replica finalizes to ``retired`` once empty.
+        """
+        now = self._now if now is None else now
+        r = self.replicas[idx]
+        if r.state != "active":
+            raise ValueError(f"replica {idx} is {r.state}, not active")
+        if len(self.active_replicas()) - 1 < self.min_replicas:
+            raise ValueError(
+                f"refusing to retire replica {idx}: fleet would drop below "
+                f"min_replicas={self.min_replicas}")
+        r.state = "draining"
+        requeued: list[FleetRequest] = []
+        withdraw = getattr(r.engine, "withdraw_waiting", None)
+        if withdraw is not None:
+            for uid in withdraw():
+                fr = r._fleet_reqs.pop(uid, None)
+                if fr is not None:
+                    fr.replica = None
+                    fr.admitted_s = None
+                    requeued.append(fr)
+            requeued.sort(key=lambda q: q.arrival_s)
+            self.router.requeue(requeued)
+        self.scale_events.append({
+            "t": now, "action": "retire", "replica": idx, "target": r.target,
+            "requeued": len(requeued), "in_flight": len(r._fleet_reqs)})
+        if not r.busy and not r.engine.active:
+            self._finalize_retire(r, now)
+        return r
+
+    def _finalize_retire(self, r: Replica, now: float) -> None:
+        r.state = "retired"
+        r.retired_s = now
+        r.busy = r.step_pending = False
+        # Pending tuning jobs for this target are demand the fleet no longer
+        # has capacity to exploit — cancel them, but only when no live
+        # replica still serves the target (the queue is shared per target).
+        svc = self._services.get(r.target)
+        if svc is not None and not any(q.target == r.target
+                                       for q in self.live_replicas()):
+            svc.cancel_pending()
+
+    def _apply_decision(self, decision, now: float) -> None:
+        if decision.action == "up":
+            self.add_replica(now=now)
+        elif decision.action == "down":
+            actives = self.active_replicas()
+            if len(actives) - 1 < self.min_replicas:
+                return  # a drain in progress already took the headroom
+            # Victim: fewest in-flight requests (cheapest drain), ties to
+            # the youngest replica (keep the fleet's elders warm).
+            victim = min(actives, key=lambda r: (len(r._fleet_reqs), -r.idx))
+            self.retire_replica(victim.idx, now=now)
+
+    def replica_seconds(self) -> float:
+        """Capacity spent: Σ per replica of (retire time − join time), in
+        virtual seconds — the equal-cost axis elastic-vs-fixed compares on."""
+        end = max(self._now, self.metrics.makespan_s)
+        return sum((r.retired_s if r.retired_s is not None else end)
+                   - r.joined_s for r in self.replicas)
 
     # -- demand-driven prefetch ------------------------------------------------
     def _prefetch_uses(self, uses: Sequence[KernelUse], priority: float) -> None:
@@ -442,7 +627,7 @@ class ServingFleet:
             # the router survives it — shed, not crash (False vetoes the
             # placement so it is not counted as dispatched).
             req.shed = "invalid"
-            self.metrics.record_shed(req)
+            self.metrics.record_shed(req, self._now)
             return False
         if engine_req.done:
             # Finished by the prefill itself (max_new_tokens=0 / prefill
@@ -453,9 +638,10 @@ class ServingFleet:
 
     def _eligible(self) -> list[int]:
         # Admission happens at step boundaries: a replica mid-(virtual)-step
-        # cannot accept work until its clock catches up.
+        # cannot accept work until its clock catches up.  Only *active*
+        # replicas take new work — draining ones finish what they hold.
         return [i for i, r in enumerate(self.replicas)
-                if not r.busy and r.free_slots > 0]
+                if r.state == "active" and not r.busy and r.free_slots > 0]
 
     def serve(self, trace: Sequence[FleetRequest], *,
               max_events: int = 200_000) -> dict:
@@ -478,6 +664,10 @@ class ServingFleet:
                     break
                 # Queued work, everything idle: dispatch at the current time.
             else:
+                # With an autoscaler, window boundaries are events too — the
+                # clock never jumps past an evaluation instant.
+                if self._next_eval is not None:
+                    next_times.append(self._next_eval)
                 now = max(now, min(next_times))
             self._now = now
 
@@ -488,7 +678,7 @@ class ServingFleet:
                 try:
                     self.router.submit(req)
                 except QueueFull:
-                    self.metrics.record_shed(req)
+                    self.metrics.record_shed(req, now)
 
             # 2) work that finishes at now: decode steps run for real.
             for r in self.replicas:
@@ -498,6 +688,9 @@ class ServingFleet:
                             self.metrics.record_completion(fr, now)
                     else:
                         r.busy = False  # prefill done; slot batch continues
+                if r.state == "draining" and not r.busy \
+                        and not r.engine.active:
+                    self._finalize_retire(r, now)
 
             # 3) background tuning in bursts: demand-ordered prefetch, then
             #    a bounded drain (publishes coalesce -> bounded re-plans).
@@ -506,19 +699,36 @@ class ServingFleet:
                     self._prefetch_hot()
                 self._drain_services()
 
+            # 3b) autoscaler: fold the just-closed telemetry window into the
+            #     controller and apply its decision *before* dispatch, so a
+            #     replica joining now takes requests this same instant.
+            if self._next_eval is not None and self.autoscaler is not None:
+                while self._next_eval <= now + 1e-12:
+                    t1 = self._next_eval
+                    w = self.metrics.window(t1 - self.autoscaler.window_s, t1)
+                    decision = self.autoscaler.observe(
+                        w, now=t1, replicas=len(self.live_replicas()))
+                    self._apply_decision(decision, t1)
+                    self._next_eval += self.autoscaler.window_s
+
             # 4) route queued requests to replicas at their boundaries.
             self.router.dispatch(now, eligible=self._eligible,
                                  admit=self._admit)
             for fr in self.router.last_shed_deadline:
-                self.metrics.record_shed(fr)
-            self.metrics.sample_queue(self.router.depth)
+                self.metrics.record_shed(fr, now)
+            live = self.live_replicas()
+            self.metrics.sample_queue(self.router.depth, now)
+            self.metrics.sample_utilization(
+                sum(r.utilization() for r in live) / len(live) if live
+                else 0.0, now)
             self.metrics.sample_capacity(
-                sum(r.engine.kv_used_tokens() for r in self.replicas),
-                sum(r.engine.kv_capacity_tokens() for r in self.replicas))
+                sum(r.engine.kv_used_tokens() for r in live),
+                sum(r.engine.kv_capacity_tokens() for r in live))
 
-            # 5) replicas with active slots begin their next decode step.
+            # 5) replicas with active slots begin their next decode step
+            #    (draining ones too — that is how they finish their work).
             for r in self.replicas:
-                if not r.busy and r.engine.active:
+                if r.state != "retired" and not r.busy and r.engine.active:
                     r.start_step(now)
         return self.summary()
 
@@ -583,6 +793,10 @@ class ServingFleet:
         out["replicas"] = [r.stats() for r in self.replicas]
         out["events"] = self._events
         out["prefetched"] = len(self.prefetched)
+        out["scale_events"] = list(self.scale_events)
+        out["replica_seconds"] = self.replica_seconds()
+        if self.autoscaler is not None:
+            out["autoscaler"] = self.autoscaler.stats()
         self.sync_plans()  # once, for both end-state metrics below
         out["schedule_mismatches"] = self._schedule_mismatches_synced()
         out["final_exact_share"] = self._final_exact_share_synced()

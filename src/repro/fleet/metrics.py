@@ -3,6 +3,13 @@
 All times are *virtual seconds* (cost-model kernel time — see DESIGN.md §2);
 latencies are also reported in *ticks* (one tick = the untuned decode-step
 cost of the reference replica) so numbers are comparable across archs.
+
+Beyond the whole-run :meth:`FleetMetrics.summary`, metrics are queryable per
+time window: :meth:`FleetMetrics.window` summarizes one ``[t0, t1)`` slice
+(completions, sheds, p50/p95, queue depth, replica utilization) and
+:meth:`window_summaries` buckets the whole run into ``window_s`` slices
+through the same code path — the autoscaler's control signal and the
+benchmark's per-phase comparison read the identical numbers.
 """
 from __future__ import annotations
 
@@ -19,12 +26,13 @@ def percentile(xs: list[float], q: float) -> float:
 
 
 class FleetMetrics:
-    """Accumulates per-request outcomes and queue-depth samples."""
+    """Accumulates per-request outcomes and timestamped gauge samples."""
 
     def __init__(self) -> None:
         self.completed: list[FleetRequest] = []
         self.shed: list[FleetRequest] = []
-        self.queue_samples: list[int] = []
+        self.queue_samples: list[tuple[float, int]] = []      # (t, depth)
+        self.util_samples: list[tuple[float, float]] = []     # (t, mean util)
         self.tokens = 0
         self.makespan_s = 0.0
         # padding-waste ledger: prompt tokens the engines actually needed vs
@@ -42,11 +50,16 @@ class FleetMetrics:
         self.tokens += req.tokens
         self.makespan_s = max(self.makespan_s, now)
 
-    def record_shed(self, req: FleetRequest) -> None:
+    def record_shed(self, req: FleetRequest, now: float | None = None) -> None:
+        req.shed_s = now if now is not None else req.arrival_s
         self.shed.append(req)
 
-    def sample_queue(self, depth: int) -> None:
-        self.queue_samples.append(depth)
+    def sample_queue(self, depth: int, now: float = 0.0) -> None:
+        self.queue_samples.append((now, depth))
+
+    def sample_utilization(self, util: float, now: float = 0.0) -> None:
+        """Sample mean replica utilization (0..1) at an event point."""
+        self.util_samples.append((now, util))
 
     def record_padding(self, true_tokens: int, padded_tokens: int) -> None:
         """Account one prefill: tokens the prompt needed vs tokens computed."""
@@ -57,6 +70,51 @@ class FleetMetrics:
         """Sample KV occupancy (summed across replicas) at an event point."""
         self.capacity_samples.append((used_tokens, capacity_tokens))
 
+    # -- windowed views --------------------------------------------------------
+    def window(self, t0: float, t1: float) -> dict:
+        """Summary of the ``[t0, t1)`` slice — the autoscaler's signal.
+
+        Completions are binned by finish time, sheds by shed time, queue and
+        utilization samples by sample time.  The same dict shape is used by
+        :meth:`window_summaries`, so a controller tuned against bench windows
+        sees the identical signal live.
+        """
+        done = [r for r in self.completed
+                if r.finished_s is not None and t0 <= r.finished_s < t1]
+        shed = [r for r in self.shed
+                if r.shed_s is not None and t0 <= r.shed_s < t1]
+        lats = [r.latency_s for r in done if r.latency_s is not None]
+        qs = [d for t, d in self.queue_samples if t0 <= t < t1]
+        us = [u for t, u in self.util_samples if t0 <= t < t1]
+        n_seen = len(done) + len(shed)
+        return {
+            "t0": t0,
+            "t1": t1,
+            "completed": len(done),
+            "shed": len(shed),
+            "shed_rate": len(shed) / n_seen if n_seen else 0.0,
+            "tokens": sum(r.tokens for r in done),
+            "latency_s": {"p50": percentile(lats, 50),
+                          "p95": percentile(lats, 95),
+                          "p99": percentile(lats, 99)},
+            "queue_depth_mean": sum(qs) / len(qs) if qs else 0.0,
+            "queue_depth_max": max(qs) if qs else 0,
+            "utilization_mean": sum(us) / len(us) if us else 0.0,
+        }
+
+    def window_summaries(self, window_s: float, *,
+                         until: float | None = None) -> list[dict]:
+        """Bucket the run into ``window_s`` slices (per-phase comparisons)."""
+        if window_s <= 0:
+            raise ValueError("window_s must be positive")
+        end = until if until is not None else self.makespan_s
+        out = []
+        t0 = 0.0
+        while t0 < end or not out:
+            out.append(self.window(t0, t0 + window_s))
+            t0 += window_s
+        return out
+
     # -- summary ---------------------------------------------------------------
     def latencies(self) -> list[float]:
         return [r.latency_s for r in self.completed if r.latency_s is not None]
@@ -65,7 +123,7 @@ class FleetMetrics:
         lats = self.latencies()
         n_done, n_shed = len(self.completed), len(self.shed)
         n_seen = n_done + n_shed
-        qs = self.queue_samples
+        qs = [d for _, d in self.queue_samples]
         out = {
             "completed": n_done,
             "shed": n_shed,

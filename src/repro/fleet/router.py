@@ -166,6 +166,7 @@ class RequestRouter:
         if queue_cap <= 0:
             raise ValueError("queue_cap must be positive")
         self.replicas = list(replicas)
+        self.requeued = 0
         self.policy = make_policy(policy)
         self.queue: collections.deque[FleetRequest] = collections.deque()
         self.queue_cap = queue_cap
@@ -180,6 +181,31 @@ class RequestRouter:
     @property
     def depth(self) -> int:
         return len(self.queue)
+
+    # -- dynamic replica set ---------------------------------------------------
+    def add_replica(self, replica) -> int:
+        """Register a new replica; returns its (stable) index.
+
+        Indices are positional and never reused — a retired replica keeps
+        its slot in the list and is excluded from dispatch by the
+        ``dispatchable`` flag, so policies and in-flight requests holding an
+        index stay valid across the fleet's whole lifetime.
+        """
+        self.replicas.append(replica)
+        return len(self.replicas) - 1
+
+    def requeue(self, reqs: Sequence[FleetRequest]) -> None:
+        """Return already-admitted requests to the *front* of the queue.
+
+        Used by drain-retire: requests a draining replica had queued but
+        never started go back ahead of new arrivals and are exempt from
+        ``queue_cap`` — they were admitted once, so bouncing them now would
+        silently drop accepted work.
+        """
+        for req in reversed(list(reqs)):
+            self.queue.appendleft(req)
+            self.requeued += 1
+        self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: FleetRequest) -> None:
@@ -232,8 +258,11 @@ class RequestRouter:
             elif eligible is not None:
                 elig = [i for i in eligible if self.replicas[i].free_slots > 0]
             else:
+                # Draining/retired replicas advertise dispatchable=False and
+                # never receive new work (fakes without the flag all do).
                 elig = [i for i, r in enumerate(self.replicas)
-                        if r.free_slots > 0]
+                        if r.free_slots > 0
+                        and getattr(r, "dispatchable", True)]
             idx = self.policy.select(req, self.replicas, elig, now=now)
             if idx is None:
                 break
@@ -256,4 +285,5 @@ class RequestRouter:
         out["queue_depth"] = self.depth
         out["queue_cap"] = self.queue_cap
         out["max_queue_depth"] = self.max_queue_depth
+        out["requeued"] = self.requeued
         return out

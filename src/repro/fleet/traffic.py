@@ -1,4 +1,4 @@
-"""Synthetic serving traffic: seeded Poisson arrivals, mixed request shapes.
+"""Synthetic serving traffic: seeded arrivals, mixed request shapes.
 
 The fleet benchmarks need *reproducible-but-variable* load: the same seed
 must replay the identical request stream across routing policies (so policy
@@ -7,6 +7,22 @@ the arrival pattern.  :class:`TrafficGenerator` produces such traces — a
 Poisson arrival process (exponential inter-arrival times) over a mixture of
 short and long prompts with per-request new-token counts and optional
 deadlines.
+
+A stationary Poisson process cannot exercise *capacity* decisions — its
+smoothed rate never moves, so an autoscaler watching it would correctly
+never scale.  Two non-homogeneous generators (both Lewis–Shedler thinning
+over a deterministic rate curve) provide production-shaped load:
+
+* :class:`BurstyTraffic` — a square wave: ``arrival_rate`` between bursts,
+  ``burst_rate`` inside periodic bursts (``burst_every_ticks`` period,
+  ``burst_len_ticks`` duration).  ``phase_at(t)`` labels each instant so
+  benchmarks can compare per-phase windows.
+* :class:`DiurnalTraffic` — a sinusoid: rate swings ``±amplitude`` around
+  ``arrival_rate`` with period ``period_ticks`` (the day/night curve).
+
+:func:`save_trace` / :func:`load_trace` round-trip any request list through
+JSON-lines, so a recorded production log (arrival timestamps + prompt +
+token budget) replays through ``ServingFleet.serve`` exactly.
 
 Times are expressed in *ticks* — one tick is the untuned decode-step cost of
 a reference replica (the fleet computes it from the cost model) — so an
@@ -20,6 +36,8 @@ from the same distribution family.
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
 
 import numpy as np
 
@@ -41,6 +59,7 @@ class FleetRequest:
     admitted_s: float | None = None
     finished_s: float | None = None
     shed: str = ""                   # "" | "queue_full" | "deadline" | "invalid"
+    shed_s: float | None = None      # virtual instant the shed happened
     tokens: int = 0
     exact_share_at_admit: float = 0.0
 
@@ -121,21 +140,150 @@ class TrafficGenerator:
         mnt = int(self.rng.integers(nt[0], nt[1] + 1))
         return max(n, 1), mnt
 
+    def _next_arrival(self) -> float:
+        """Advance the stream clock to the next arrival and return it."""
+        self._t += float(self.rng.exponential(self.tick_s / self.arrival_rate))
+        return self._t
+
+    def _emit(self, t: float) -> FleetRequest:
+        plen, mnt = self._shape()
+        prompt = [int(x) for x in
+                  self.rng.integers(1, self.vocab_size, size=plen)]
+        deadline = (t + self.deadline_ticks * self.tick_s
+                    if self.deadline_ticks is not None else None)
+        self._uid += 1
+        return FleetRequest(uid=self._uid, prompt=prompt, max_new_tokens=mnt,
+                            arrival_s=t, deadline_s=deadline)
+
     def trace(self, n_requests: int) -> list[FleetRequest]:
         """``n_requests`` arrivals in order; repeated calls continue the
         stream (fresh generator + same seed -> identical trace)."""
-        out: list[FleetRequest] = []
-        mean_gap = self.tick_s / self.arrival_rate
-        for _ in range(n_requests):
+        return [self._emit(self._next_arrival()) for _ in range(n_requests)]
+
+
+class VariableRateTraffic(TrafficGenerator):
+    """Non-homogeneous Poisson arrivals over a deterministic rate curve.
+
+    Subclasses define :meth:`rate_at` (expected requests per tick at virtual
+    instant ``t``) and :meth:`peak_rate` (its maximum).  Arrivals are drawn
+    by Lewis–Shedler thinning: candidate gaps at the peak rate, each kept
+    with probability ``rate_at(t) / peak_rate()`` — exact for any bounded
+    rate curve, and seed-deterministic like the base generator.
+    """
+
+    def rate_at(self, t: float) -> float:
+        raise NotImplementedError
+
+    def peak_rate(self) -> float:
+        raise NotImplementedError
+
+    def _next_arrival(self) -> float:
+        peak = self.peak_rate()
+        mean_gap = self.tick_s / peak
+        while True:
             self._t += float(self.rng.exponential(mean_gap))
-            t = self._t
-            plen, mnt = self._shape()
-            prompt = [int(x) for x in
-                      self.rng.integers(1, self.vocab_size, size=plen)]
-            deadline = (t + self.deadline_ticks * self.tick_s
-                        if self.deadline_ticks is not None else None)
-            self._uid += 1
-            out.append(FleetRequest(uid=self._uid, prompt=prompt,
-                                    max_new_tokens=mnt, arrival_s=t,
-                                    deadline_s=deadline))
-        return out
+            if self.rng.random() * peak <= self.rate_at(self._t):
+                return self._t
+
+
+class BurstyTraffic(VariableRateTraffic):
+    """Square-wave load: a base rate punctuated by periodic bursts.
+
+    Every ``burst_every_ticks`` ticks a burst of ``burst_len_ticks`` begins
+    during which the arrival rate jumps from ``arrival_rate`` to
+    ``burst_rate``; ``offset_ticks`` delays the first burst.  This is the
+    canonical autoscaler workload: sustained spikes a fixed fleet must
+    either over-provision for or shed.
+    """
+
+    def __init__(self, *, burst_rate: float, burst_every_ticks: float,
+                 burst_len_ticks: float, offset_ticks: float = 0.0, **kw):
+        super().__init__(**kw)
+        if burst_rate < self.arrival_rate:
+            raise ValueError("burst_rate must be >= arrival_rate")
+        if not 0 < burst_len_ticks <= burst_every_ticks:
+            raise ValueError("need 0 < burst_len_ticks <= burst_every_ticks")
+        self.burst_rate = burst_rate
+        self.burst_every_ticks = burst_every_ticks
+        self.burst_len_ticks = burst_len_ticks
+        self.offset_ticks = offset_ticks
+
+    def phase_at(self, t: float) -> str:
+        """``"burst"`` or ``"base"`` at virtual instant ``t``."""
+        ticks = t / self.tick_s - self.offset_ticks
+        if ticks < 0:
+            return "base"
+        return ("burst" if ticks % self.burst_every_ticks < self.burst_len_ticks
+                else "base")
+
+    def rate_at(self, t: float) -> float:
+        return self.burst_rate if self.phase_at(t) == "burst" else self.arrival_rate
+
+    def peak_rate(self) -> float:
+        return self.burst_rate
+
+
+class DiurnalTraffic(VariableRateTraffic):
+    """Sinusoidal load: rate swings ``±amplitude`` around ``arrival_rate``
+    with period ``period_ticks`` — the day/night demand curve, for
+    predictive-scaling experiments and slow-ramp controller tests."""
+
+    def __init__(self, *, period_ticks: float, amplitude: float | None = None,
+                 **kw):
+        super().__init__(**kw)
+        if period_ticks <= 0:
+            raise ValueError("period_ticks must be positive")
+        self.period_ticks = period_ticks
+        self.amplitude = (amplitude if amplitude is not None
+                          else 0.8 * self.arrival_rate)
+        if not 0 <= self.amplitude <= self.arrival_rate:
+            raise ValueError("amplitude must lie in [0, arrival_rate]")
+
+    def rate_at(self, t: float) -> float:
+        phase = 2.0 * math.pi * (t / self.tick_s) / self.period_ticks
+        return self.arrival_rate + self.amplitude * math.sin(phase)
+
+    def peak_rate(self) -> float:
+        return self.arrival_rate + self.amplitude
+
+
+# ---------------------------------------------------------------------------
+# Recorded-trace replay
+# ---------------------------------------------------------------------------
+
+
+def save_trace(path: str, requests: "list[FleetRequest]") -> None:
+    """Write a request trace as JSON-lines (arrival order preserved).
+
+    Only the *workload* fields are recorded — arrival time, prompt, token
+    budget, deadline, EOS — so a saved trace replays identically regardless
+    of what routing/scaling outcome it had when recorded.
+    """
+    with open(path, "w") as f:
+        for r in requests:
+            f.write(json.dumps({
+                "uid": r.uid, "arrival_s": r.arrival_s, "prompt": r.prompt,
+                "max_new_tokens": r.max_new_tokens,
+                "deadline_s": r.deadline_s, "eos_id": r.eos_id}) + "\n")
+
+
+def load_trace(path: str) -> "list[FleetRequest]":
+    """Load a trace saved by :func:`save_trace` (or a recorded production
+    log in the same JSON-lines shape) for replay through a fleet."""
+    out: list[FleetRequest] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            out.append(FleetRequest(
+                uid=int(d["uid"]), prompt=[int(t) for t in d["prompt"]],
+                max_new_tokens=int(d["max_new_tokens"]),
+                arrival_s=float(d["arrival_s"]),
+                deadline_s=(float(d["deadline_s"])
+                            if d.get("deadline_s") is not None else None),
+                eos_id=(int(d["eos_id"])
+                        if d.get("eos_id") is not None else None)))
+    out.sort(key=lambda r: r.arrival_s)
+    return out

@@ -21,6 +21,16 @@ donors from another chip's namespace.
 engine (``--decode-batch`` lanes over a ``--pool-pages`` x ``--page-size``
 KV pool, ``--chunk``-token prefill slices); ``--engine slot`` (default)
 keeps the fixed-slot engine.  See DESIGN.md §8.
+
+``--autoscale`` makes the fleet elastic: a hysteresis controller over the
+windowed telemetry warm-joins replicas (up to ``--max-replicas``) under
+pressure and drain-retires them (down to ``--min-replicas``) when quiet;
+``--scale-window`` / ``--cooldown`` are in ticks.  ``--traffic bursty``
+(square-wave: ``--burst-rate`` / ``--burst-every`` / ``--burst-len``) and
+``--traffic diurnal`` (sinusoid: ``--period`` / ``--amplitude``) produce
+the load shapes the controller is built for; ``--save-trace`` records the
+generated stream and ``--replay-trace`` replays a recorded one verbatim.
+See DESIGN.md §9.
 """
 from __future__ import annotations
 
@@ -33,7 +43,16 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_arch, reduced
-from repro.fleet import POLICIES, ServingFleet, TrafficGenerator
+from repro.fleet import (
+    POLICIES,
+    Autoscaler,
+    BurstyTraffic,
+    DiurnalTraffic,
+    ServingFleet,
+    TrafficGenerator,
+    load_trace,
+    save_trace,
+)
 from repro.models.build import build_model
 from repro.targets import DEFAULT_TARGET, list_targets
 
@@ -83,6 +102,34 @@ def main(argv=None) -> dict:
     ap.add_argument("--tuning-budget-s", type=float, default=float("inf"))
     ap.add_argument("--drain-jobs", type=int, default=2,
                     help="background tuning jobs drained per burst")
+    ap.add_argument("--defrag-threshold", type=float, default=None,
+                    help="paged: defragment a replica's KV pool when its "
+                         "fragmentation exceeds this (0, 1) ratio")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic fleet: warm-join/drain-retire replicas "
+                         "between --min-replicas and --max-replicas")
+    ap.add_argument("--min-replicas", type=int, default=1)
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--scale-window", type=float, default=4.0,
+                    help="autoscaler telemetry window, in ticks")
+    ap.add_argument("--cooldown", type=float, default=8.0,
+                    help="refractory period after a scale action, in ticks")
+    ap.add_argument("--traffic", choices=["poisson", "bursty", "diurnal"],
+                    default="poisson", help="arrival-rate shape")
+    ap.add_argument("--burst-rate", type=float, default=2.0,
+                    help="bursty: requests per tick during a burst")
+    ap.add_argument("--burst-every", type=float, default=48.0,
+                    help="bursty: ticks between burst starts")
+    ap.add_argument("--burst-len", type=float, default=10.0,
+                    help="bursty: burst duration in ticks")
+    ap.add_argument("--period", type=float, default=96.0,
+                    help="diurnal: rate-curve period in ticks")
+    ap.add_argument("--amplitude", type=float, default=None,
+                    help="diurnal: rate swing (default 0.8x --arrival-rate)")
+    ap.add_argument("--save-trace", default="",
+                    help="record the generated request trace to this file")
+    ap.add_argument("--replay-trace", default="",
+                    help="replay a recorded trace instead of generating one")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -114,7 +161,8 @@ def main(argv=None) -> dict:
     if args.engine == "paged":
         engine_kw = {"decode_batch": args.decode_batch,
                      "page_size": args.page_size,
-                     "pool_pages": args.pool_pages, "chunk": args.chunk}
+                     "pool_pages": args.pool_pages, "chunk": args.chunk,
+                     "defrag_threshold": args.defrag_threshold}
     fleet = ServingFleet(
         cfg, model, params, replicas=args.replicas, slots=args.slots,
         max_len=args.max_len, engine=args.engine, registry=registry,
@@ -122,13 +170,34 @@ def main(argv=None) -> dict:
         prefetch=args.prefetch, targets=targets,
         donor_target=args.donor_target, tuning_budget_s=args.tuning_budget_s,
         drain_jobs=args.drain_jobs, seed=args.seed, extras=extras, **engine_kw)
-    gen = TrafficGenerator(
-        seed=args.seed, vocab_size=cfg.vocab_size,
-        arrival_rate=args.arrival_rate, tick_s=fleet.tick_s,
-        long_frac=args.long_frac, deadline_ticks=args.deadline_ticks,
-        prompt_cap=max(args.max_len // 2, 1))
+    if args.autoscale:
+        fleet.attach_autoscaler(Autoscaler(
+            min_replicas=args.min_replicas, max_replicas=args.max_replicas,
+            window_s=args.scale_window * fleet.tick_s,
+            cooldown_s=args.cooldown * fleet.tick_s))
+
+    gen_kw = dict(seed=args.seed, vocab_size=cfg.vocab_size,
+                  arrival_rate=args.arrival_rate, tick_s=fleet.tick_s,
+                  long_frac=args.long_frac,
+                  deadline_ticks=args.deadline_ticks,
+                  prompt_cap=max(args.max_len // 2, 1))
+    if args.replay_trace:
+        trace = load_trace(args.replay_trace)
+    else:
+        if args.traffic == "bursty":
+            gen = BurstyTraffic(burst_rate=args.burst_rate,
+                                burst_every_ticks=args.burst_every,
+                                burst_len_ticks=args.burst_len, **gen_kw)
+        elif args.traffic == "diurnal":
+            gen = DiurnalTraffic(period_ticks=args.period,
+                                 amplitude=args.amplitude, **gen_kw)
+        else:
+            gen = TrafficGenerator(**gen_kw)
+        trace = gen.trace(args.requests)
+    if args.save_trace:
+        save_trace(args.save_trace, trace)
     try:
-        summary = fleet.serve(gen.trace(args.requests))
+        summary = fleet.serve(trace)
     finally:
         fleet.close()
         if tmp_root is not None:

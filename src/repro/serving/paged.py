@@ -62,7 +62,8 @@ class PagedServingEngine:
     def __init__(self, model: Model, params: Any, *, decode_batch: int,
                  max_ctx: int, page_size: int = 8, pool_pages: int | None = None,
                  chunk: int = 8, chunks_per_step: int | None = None,
-                 admit_cap: int | None = None, provider=None,
+                 admit_cap: int | None = None,
+                 defrag_threshold: float | None = None, provider=None,
                  plan: ExecutionPlan | None = None,
                  record_logits: bool = False):
         cfg = model.cfg
@@ -86,6 +87,9 @@ class PagedServingEngine:
         if pool_pages is None:
             pool_pages = decode_batch * self.pages_per_seq + 1  # +1: trash
         self.table = PageTable(pool_pages, page_size)
+        if defrag_threshold is not None and not 0.0 < defrag_threshold < 1.0:
+            raise ValueError("defrag_threshold must lie in (0, 1)")
+        self.defrag_threshold = defrag_threshold
         self.record_logits = record_logits
 
         # ---- cache leaf classification (shape probes, no allocation) -------
@@ -127,6 +131,7 @@ class PagedServingEngine:
         self.last_logits = None
         self.chunk_logits: dict[int, np.ndarray] = {}
         self.preemptions = 0
+        self.defrags = 0                     # pool compactions actually applied
         self.prefill_true_tokens = 0
         self.prefill_padded_tokens = 0       # == true: chunked prefill pads nothing
 
@@ -438,6 +443,62 @@ class PagedServingEngine:
         return self.replans != before
 
     # ------------------------------------------------------------------
+    # lifecycle: withdrawal (drain-retire support)
+    # ------------------------------------------------------------------
+    def withdraw_waiting(self) -> list[int]:
+        """Remove and return the uids of waiting requests with no progress.
+
+        Used when this engine is being drain-retired: requests it accepted
+        but never started (no chunk run, no token emitted) can be replayed
+        elsewhere verbatim.  Preempted victims carrying generated tokens are
+        *kept* — they hold partial output only this engine can finish.
+        Withdrawn requests hold no pages (pages are allocated lane-side), so
+        no pool cleanup is needed.
+        """
+        kept: deque[Request] = deque()
+        out: list[int] = []
+        while self.waiting:
+            r = self.waiting.popleft()
+            if r.generated or r.uid in self._skip_emit:
+                kept.append(r)
+                continue
+            self._ptoks.pop(r.uid, None)
+            out.append(r.uid)
+        self.waiting = kept
+        return out
+
+    # ------------------------------------------------------------------
+    # defragmentation
+    # ------------------------------------------------------------------
+    def _defrag(self) -> int:
+        """Compact the page pool and replay the moves on the KV rows.
+
+        :meth:`PageTable.defrag` rewrites the table and returns
+        ``(src, dst)`` page moves whose destinations were free — so copying
+        src rows over dst rows in each pool-flat leaf never clobbers live
+        data, in any order.  Generations are bit-exact across a defrag: the
+        same rows hold the same values, only at new pool offsets, and
+        ``flat_rows`` already points at them.
+        """
+        moves = self.table.defrag()
+        if not moves:
+            return 0
+        ps = self.page_size
+        src = jnp.asarray(np.concatenate(
+            [np.arange(s * ps, (s + 1) * ps) for s, _ in moves]))
+        dst = jnp.asarray(np.concatenate(
+            [np.arange(d * ps, (d + 1) * ps) for _, d in moves]))
+        for i, (leaf, (ba, la)) in enumerate(zip(self.leaves, self._info)):
+            if la is None:
+                continue
+            pa = self._pool_axis(ba, la)
+            pm = jnp.moveaxis(leaf, pa, 0)
+            pm = pm.at[dst].set(pm[src])
+            self.leaves[i] = jnp.moveaxis(pm, 0, pa)
+        self.defrags += 1
+        return len(moves)
+
+    # ------------------------------------------------------------------
     # the iteration
     # ------------------------------------------------------------------
     def _preempt(self, uid: int) -> None:
@@ -480,6 +541,11 @@ class PagedServingEngine:
         self._maybe_replan()
         if not self.in_flight:
             return []
+        # Step boundary is the one safe instant to move pages: no chunk or
+        # decode is mid-flight, so the table and the pool rows agree.
+        if self.defrag_threshold is not None and \
+                self.table.fragmentation() > self.defrag_threshold:
+            self._defrag()
         self._steps += 1
         if self.plan is not None and (
                 not self.plan_history

@@ -1,0 +1,363 @@
+"""Elastic fleet: autoscaler hysteresis, demand decay, windowed metrics,
+bursty/replay traffic, and the warm-join / drain-retire lifecycle edges."""
+import jax
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.fleet import (
+    Autoscaler,
+    BurstyTraffic,
+    DemandTracker,
+    DiurnalTraffic,
+    FleetMetrics,
+    FleetRequest,
+    ServingFleet,
+    TrafficGenerator,
+    load_trace,
+    save_trace,
+)
+from repro.models import build_model
+from repro.service import ScheduleRegistry
+
+
+def _req(uid, plen=3, arrival=0.0, mnt=2):
+    return FleetRequest(uid=uid, prompt=[1] * plen, max_new_tokens=mnt,
+                        arrival_s=arrival)
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler (pure controller: synthetic windows)
+# ---------------------------------------------------------------------------
+
+
+def _win(**kw):
+    w = {"t0": 0.0, "t1": 10.0, "completed": 5, "shed": 0, "shed_rate": 0.0,
+         "tokens": 20, "latency_s": {"p50": 1.0, "p95": 2.0, "p99": 2.0},
+         "queue_depth_mean": 0.0, "queue_depth_max": 0,
+         "utilization_mean": 0.5}
+    w.update(kw)
+    return w
+
+
+def _scaler(**kw):
+    kw.setdefault("min_replicas", 1)
+    kw.setdefault("max_replicas", 4)
+    kw.setdefault("window_s", 10.0)
+    kw.setdefault("cooldown_s", 30.0)
+    return Autoscaler(**kw)
+
+
+def test_up_requires_consecutive_hot_windows():
+    a = _scaler(up_windows=2, queue_high=2.0, cooldown_s=0.0)
+    hot = _win(queue_depth_mean=5.0)
+    assert a.observe(hot, now=10.0, replicas=1).action == "hold"
+    # a quiet-but-not-idle window resets the streak
+    assert a.observe(_win(), now=20.0, replicas=1).action == "hold"
+    assert a.observe(hot, now=30.0, replicas=1).action == "hold"
+    d = a.observe(hot, now=40.0, replicas=1)
+    assert d.action == "up" and "queue_depth_mean" in d.reason
+
+
+def test_cooldown_suppresses_flapping():
+    """Oscillating load inside the cooldown never scales — every decision in
+    the refractory window is a hold with reason 'cooldown'."""
+    a = _scaler(up_windows=1, down_windows=1, cooldown_s=30.0,
+                queue_high=2.0, util_low=0.4, queue_low=0.5)
+    hot = _win(queue_depth_mean=5.0)
+    quiet = _win(utilization_mean=0.1)
+    assert a.observe(hot, now=10.0, replicas=2).action == "up"
+    for now, w in ((20.0, quiet), (30.0, hot), (39.0, quiet)):
+        d = a.observe(w, now=now, replicas=3)
+        assert d.action == "hold" and d.reason == "cooldown"
+    # cooldown over: pressure present in this window acts immediately
+    assert a.observe(hot, now=50.0, replicas=3).action == "up"
+
+
+def test_bounds_clamp_and_down_needs_quiet_streak():
+    a = _scaler(up_windows=1, down_windows=2, cooldown_s=0.0,
+                min_replicas=1, max_replicas=2)
+    hot = _win(shed=3, shed_rate=0.4)
+    d = a.observe(hot, now=10.0, replicas=2)
+    assert d.action == "hold" and "at max_replicas" in d.reason
+    quiet = _win(utilization_mean=0.1, queue_depth_mean=0.0)
+    assert a.observe(quiet, now=20.0, replicas=2).action == "hold"
+    assert a.observe(quiet, now=30.0, replicas=2).action == "down"
+    assert a.observe(quiet, now=40.0, replicas=1).action == "hold"  # streak reset
+    d = a.observe(quiet, now=50.0, replicas=1)
+    assert d.action == "hold" and "at min_replicas" in d.reason
+    s = a.stats()
+    assert s["evaluations"] == 5 and s["scale_downs"] == 1
+
+
+def test_p95_trend_is_an_up_signal():
+    a = _scaler(up_windows=1, cooldown_s=0.0, p95_rise=0.5)
+    a.observe(_win(latency_s={"p50": 1.0, "p95": 2.0, "p99": 2.0}),
+              now=10.0, replicas=1)
+    d = a.observe(_win(latency_s={"p50": 1.5, "p95": 4.0, "p99": 5.0}),
+                  now=20.0, replicas=1)
+    assert d.action == "up" and "p95 rose" in d.reason
+
+
+# ---------------------------------------------------------------------------
+# Demand decay (satellite: cold bucket overtakes)
+# ---------------------------------------------------------------------------
+
+
+def test_demand_decay_cold_bucket_overtakes():
+    """A bucket hot long ago decays below the bucket hot now; without decay
+    the stale bucket keeps the top rank forever."""
+    decayed = DemandTracker(half_life_s=10.0)
+    frozen = DemandTracker()
+    for d in (decayed, frozen):
+        for i in range(8):
+            d.record(_req(i, plen=3, arrival=0.0))
+        for i in range(2):
+            d.record(_req(100 + i, plen=9, arrival=100.0))
+    # 10 half-lives later: 8 arrivals have decayed to ~0.008 weight
+    assert decayed.hottest()[0][0] == 9
+    assert decayed.total < 3.0
+    assert frozen.hottest()[0][0] == 3          # no decay: stale bucket wins
+    assert frozen.total == 10                    # ints stay exact
+    assert decayed.stats()["half_life_s"] == 10.0
+
+
+def test_demand_decay_prunes_dead_buckets():
+    d = DemandTracker(half_life_s=1.0)
+    d.record(_req(1, plen=3, arrival=0.0))
+    d.record(_req(2, plen=9, arrival=200.0))  # 200 half-lives: 3 evaporates
+    assert [b for b, _ in d.hottest()] == [9]
+
+
+# ---------------------------------------------------------------------------
+# Windowed metrics (satellite: one code path for signal and bench)
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_windows_bin_by_time():
+    m = FleetMetrics()
+    for uid, (arr, fin) in enumerate(((0.0, 1.0), (0.5, 1.5), (2.2, 3.0))):
+        r = _req(uid, arrival=arr)
+        r.tokens = 2
+        m.record_completion(r, fin)
+    shed = _req(9, arrival=1.4)
+    shed.shed = "queue_full"
+    m.record_shed(shed, 1.4)
+    m.sample_queue(4, 0.5)
+    m.sample_queue(2, 1.5)
+    m.sample_queue(0, 2.5)
+    m.sample_utilization(1.0, 0.5)
+    m.sample_utilization(0.0, 2.5)
+
+    w0, w1 = m.window(0.0, 2.0), m.window(2.0, 4.0)
+    assert w0["completed"] == 2 and w0["shed"] == 1
+    assert w0["shed_rate"] == pytest.approx(1 / 3)
+    assert w0["queue_depth_mean"] == pytest.approx(3.0)
+    assert w0["queue_depth_max"] == 4
+    assert w0["utilization_mean"] == pytest.approx(1.0)
+    assert w0["latency_s"]["p50"] == pytest.approx(1.0)
+    assert w1["completed"] == 1 and w1["shed"] == 0
+    assert w1["latency_s"]["p95"] == pytest.approx(0.8)
+
+    ws = m.window_summaries(2.0)
+    assert [w["t0"] for w in ws] == [0.0, 2.0]
+    assert [w["completed"] for w in ws] == [2, 1]
+    # whole-run summary still agrees with the union of windows
+    assert m.summary()["completed"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Bursty / diurnal / replay traffic
+# ---------------------------------------------------------------------------
+
+
+def test_bursty_traffic_concentrates_arrivals_in_bursts():
+    gen = BurstyTraffic(seed=1, vocab_size=64, arrival_rate=0.2,
+                        burst_rate=2.0, burst_every_ticks=50.0,
+                        burst_len_ticks=10.0, tick_s=1.0)
+    trace = gen.trace(400)
+    t_end = trace[-1].arrival_s
+    n_burst = sum(1 for r in trace if gen.phase_at(r.arrival_s) == "burst")
+    burst_time = 0.2 * t_end     # bursts cover 10/50 of the timeline
+    base_time = 0.8 * t_end
+    rate_burst = n_burst / burst_time
+    rate_base = (len(trace) - n_burst) / base_time
+    assert rate_burst > 4 * rate_base       # true ratio is 10x
+    # deterministic under the seed, different under another
+    again = BurstyTraffic(seed=1, vocab_size=64, arrival_rate=0.2,
+                          burst_rate=2.0, burst_every_ticks=50.0,
+                          burst_len_ticks=10.0, tick_s=1.0).trace(400)
+    assert [r.arrival_s for r in again] == [r.arrival_s for r in trace]
+    with pytest.raises(ValueError, match="burst_rate"):
+        BurstyTraffic(arrival_rate=1.0, burst_rate=0.5,
+                      burst_every_ticks=10.0, burst_len_ticks=2.0)
+
+
+def test_diurnal_traffic_rate_curve():
+    gen = DiurnalTraffic(seed=0, arrival_rate=1.0, amplitude=0.8,
+                         period_ticks=100.0, tick_s=1.0)
+    assert gen.rate_at(25.0) == pytest.approx(1.8)   # peak at quarter period
+    assert gen.rate_at(75.0) == pytest.approx(0.2)   # trough
+    assert gen.peak_rate() == pytest.approx(1.8)
+    trace = gen.trace(50)
+    assert [r.arrival_s for r in trace] == sorted(r.arrival_s for r in trace)
+    with pytest.raises(ValueError, match="amplitude"):
+        DiurnalTraffic(arrival_rate=1.0, amplitude=1.5, period_ticks=10.0)
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    gen = TrafficGenerator(seed=5, vocab_size=64, deadline_ticks=8.0)
+    trace = gen.trace(12)
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, trace)
+    back = load_trace(path)
+    assert [(r.uid, r.arrival_s, r.prompt, r.max_new_tokens, r.deadline_s)
+            for r in back] == \
+           [(r.uid, r.arrival_s, r.prompt, r.max_new_tokens, r.deadline_s)
+            for r in trace]
+    # outcome fields are not recorded: a replayed trace starts clean
+    assert all(r.shed == "" and r.finished_s is None for r in back)
+
+
+# ---------------------------------------------------------------------------
+# Fleet lifecycle (real engines)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = reduced(get_arch("minitron-4b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_retire_refused_at_min_replicas(small_lm, tmp_path):
+    cfg, model, params = small_lm
+    fleet = ServingFleet(cfg, model, params, replicas=2, slots=2, max_len=32,
+                         registry=ScheduleRegistry(str(tmp_path / "reg")))
+    fleet.retire_replica(1)
+    assert fleet.replicas[1].state == "retired"    # idle: finalizes at once
+    with pytest.raises(ValueError, match="min_replicas"):
+        fleet.retire_replica(0)
+    with pytest.raises(ValueError, match="not active"):
+        fleet.retire_replica(1)
+    assert [e["action"] for e in fleet.scale_events] == ["retire"]
+    fleet.close()
+
+
+def test_warm_join_inherits_published_exact_tier(small_lm, tmp_path):
+    """A replica joining after upgrades were published boots with them
+    exact-tier — the warm-join contract the bench's share criterion rests
+    on — and the recorded event carries join >= pre-join share."""
+    import dataclasses as dc
+
+    from repro.core.database import Record
+    from repro.core.schedule import default_schedule
+    from repro.targets import DEFAULT_TARGET
+
+    cfg, model, params = small_lm
+    registry = ScheduleRegistry(str(tmp_path / "reg"))
+    fleet = ServingFleet(cfg, model, params, replicas=1, slots=2, max_len=32,
+                         registry=registry)
+    svc = fleet.services[DEFAULT_TARGET]
+    for _ in range(4):
+        fleet.demand.record(_req(0, plen=3))
+    inst = next(u.instance for u in fleet.replicas[0].engine.plan.uses
+                if u.instance.class_id == "matmul")
+    upgraded = dc.replace(default_schedule(inst), unroll=4,
+                          source="background")
+    registry.publish([Record(instance=inst, schedule=upgraded,
+                             seconds=svc.runner.seconds(inst, upgraded),
+                             model_id="background", target=DEFAULT_TARGET)])
+
+    joined = fleet.add_replica(now=5.0)
+    assert joined.idx == 1 and joined.joined_s == 5.0
+    assert joined.engine.plan.lookup(inst).tier == "exact"   # born warm
+    ev = fleet.scale_events[-1]
+    assert ev["action"] == "join"
+    assert ev["join_exact_share"] >= ev["pre_join_exact_share"]
+    assert fleet.schedule_mismatches() == 0
+    assert len(fleet.router.replicas) == 2
+    fleet.close()
+
+
+def test_warm_join_empty_registry_degrades_to_default(small_lm, tmp_path):
+    cfg, model, params = small_lm
+    fleet = ServingFleet(cfg, model, params, replicas=1, slots=2, max_len=32,
+                         registry=ScheduleRegistry(str(tmp_path / "e")))
+    fleet.demand.record(_req(0, plen=3))
+    joined = fleet.add_replica()
+    plan = joined.engine.plan
+    assert plan is not None and plan.tier_counts().get("exact", 0) == 0
+    ev = fleet.scale_events[-1]
+    assert ev["join_exact_share"] == 0.0 == ev["pre_join_exact_share"]
+    # and it actually serves: route one request through the joined replica
+    req = _req(1, plen=3)
+    fleet.demand.record(req)
+    assert fleet._admit(req, joined.idx) is True
+    fleet.close()
+
+
+def test_retire_requeues_engine_waiting_work(small_lm, tmp_path):
+    """Drain-retire with queued-but-unstarted work: the paged engine's
+    waiting requests are withdrawn, requeued at the router front, and
+    complete on the surviving replica — nothing is dropped."""
+    cfg, model, params = small_lm
+    fleet = ServingFleet(cfg, model, params, replicas=2, slots=2, max_len=32,
+                         engine="paged", decode_batch=2, page_size=4,
+                         chunk=8, registry=ScheduleRegistry(str(tmp_path / "r")))
+    reqs = [_req(i, plen=3) for i in range(3)]
+    for r in reqs:
+        fleet.demand.record(r)
+        assert fleet._admit(r, 0) is True     # all parked in replica 0
+    assert fleet.replicas[0].engine.in_flight == 3
+
+    fleet.retire_replica(0)
+    ev = fleet.scale_events[-1]
+    assert ev["requeued"] == 3 and ev["in_flight"] == 0
+    assert fleet.replicas[0].state == "retired"   # emptied by the withdraw
+    assert fleet.router.depth == 3
+    assert all(r.replica is None for r in reqs)
+
+    summary = fleet.serve([])                     # drain the requeue
+    assert summary["completed"] == 3 and summary["shed"] == 0
+    assert all(r.replica == 1 for r in reqs)
+    assert summary["router"]["requeued"] == 3
+    fleet.close()
+
+
+def test_elastic_fleet_scales_through_a_burst(small_lm, tmp_path):
+    """End-to-end: an autoscaled fleet riding a bursty trace joins and
+    retires replicas mid-stream with zero drops and zero divergence."""
+    cfg, model, params = small_lm
+    fleet = ServingFleet(cfg, model, params, replicas=1, slots=2, max_len=32,
+                         registry=ScheduleRegistry(str(tmp_path / "reg")),
+                         policy="least_loaded", queue_cap=8)
+    scaler = Autoscaler(min_replicas=1, max_replicas=2,
+                        window_s=8.0 * fleet.tick_s,
+                        cooldown_s=8.0 * fleet.tick_s,
+                        up_windows=1, down_windows=2,
+                        queue_high=1.0, util_low=0.6, queue_low=0.75)
+    fleet.attach_autoscaler(scaler)
+    gen = BurstyTraffic(seed=2, vocab_size=cfg.vocab_size, arrival_rate=0.3,
+                        burst_rate=3.0, burst_every_ticks=40.0,
+                        burst_len_ticks=10.0, offset_ticks=4.0,
+                        tick_s=fleet.tick_s, short_lens=(3, 6),
+                        long_lens=(8, 12), new_tokens=(2, 4), prompt_cap=12)
+    n = 30
+    summary = fleet.serve(gen.trace(n))
+    assert summary["completed"] + summary["shed"] == n   # zero drops
+    assert summary["completed"] > 0
+    assert summary["schedule_mismatches"] == 0
+    ups = [e for e in summary["scale_events"] if e["action"] == "join"]
+    assert len(ups) >= 1                                  # the burst scaled us
+    assert summary["autoscaler"]["evaluations"] > 0
+    assert summary["replica_seconds"] > 0
+    # every decision during a cooldown held (no flapping)
+    last = None
+    for d in scaler.decisions:
+        if last is not None and d.t - last < scaler.cooldown_s:
+            assert d.action == "hold"
+        if d.action != "hold":
+            last = d.t
+    fleet.close()
