@@ -1,0 +1,155 @@
+"""Observability overhead benchmark: tracing must be (nearly) free.
+
+The unified observability layer (DESIGN.md §10) claims two properties:
+
+1. **Disabled is free, enabled is cheap** — the default ``NULL_TRACER``
+   costs one attribute check per instrumentation site, and a live tracer
+   appends records without perturbing the run.  The same fleet scenario is
+   served twice — tracer off, tracer on — and the *wall-clock* throughput
+   delta must stay under ``MAX_OVERHEAD_PCT``.
+2. **Observation does not change behaviour** — both runs must produce the
+   *identical virtual outcome*: same completions, sheds, tokens, makespan,
+   and latency percentiles, and 0 cross-replica schedule mismatches.  The
+   virtual clock is deterministic, so any divergence means instrumentation
+   leaked into the serving path.
+
+On top, the trace itself is validated end-to-end: the Chrome export is
+re-loaded and ``repro.obs.report`` must reproduce the fleet's p95 within
+1% (the acceptance bound; they agree exactly by construction — the async
+request spans carry the very intervals ``FleetMetrics`` aggregates).  The
+sample trace is saved to ``benchmarks/results/trace.json`` so CI uploads a
+Perfetto-loadable artifact every run.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from benchmarks import common
+from repro.configs import get_arch, reduced
+from repro.fleet import ServingFleet, TrafficGenerator
+from repro.models import build_model
+from repro.obs import Tracer
+from repro.obs import report as obs_report
+from repro.obs.export import load_records, write_chrome_trace
+
+MAX_OVERHEAD_PCT = 5.0   # enabled-vs-disabled wall-clock budget
+P95_TOLERANCE = 0.01     # trace_report p95 vs FleetMetrics p95
+
+PRESETS = {
+    "smoke": {"arch": "minitron-4b", "replicas": 2, "slots": 2,
+              "max_len": 32, "requests": 48, "arrival_rate": 1.0,
+              "queue_cap": 8, "repeats": 3, "seed": 0},
+    "full": {"arch": "minitron-4b", "replicas": 3, "slots": 2,
+             "max_len": 64, "requests": 128, "arrival_rate": 1.2,
+             "queue_cap": 12, "repeats": 5, "seed": 0},
+}
+
+
+def _serve(p: dict, model, params, cfg, tracer) -> tuple[dict, float]:
+    """One serve of the preset trace; returns (summary, wall seconds)."""
+    fleet = ServingFleet(cfg, model, params, replicas=p["replicas"],
+                         slots=p["slots"], max_len=p["max_len"],
+                         policy="least_loaded", queue_cap=p["queue_cap"],
+                         seed=p["seed"], tracer=tracer)
+    gen = TrafficGenerator(seed=p["seed"], vocab_size=cfg.vocab_size,
+                           arrival_rate=p["arrival_rate"],
+                           tick_s=fleet.tick_s, short_lens=(3, 6),
+                           long_lens=(8, 12), new_tokens=(2, 4),
+                           prompt_cap=p["max_len"] // 2)
+    trace = gen.trace(p["requests"])
+    t0 = time.monotonic()
+    summary = fleet.serve(trace)
+    wall = time.monotonic() - t0
+    fleet.close()
+    return summary, wall
+
+
+def _virtual_outcome(s: dict) -> dict:
+    """The behaviour fingerprint both runs must share exactly."""
+    return {"completed": s["completed"], "shed": s["shed"],
+            "tokens": s["tokens"], "makespan_s": s["makespan_s"],
+            "latency_p50": s["latency_s"]["p50"],
+            "latency_p95": s["latency_s"]["p95"],
+            "schedule_mismatches": s["schedule_mismatches"]}
+
+
+def run(preset: str = "smoke") -> list[tuple]:
+    p = PRESETS[preset]
+    cfg = reduced(get_arch(p["arch"]))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # Warm-up run: jit compilation must not be charged to either arm.
+    _serve(p, model, params, cfg, None)
+
+    # Best-of-N wall times, arms interleaved against drift.
+    off_walls, on_walls = [], []
+    off_sum = on_sum = tracer = None
+    for _ in range(p["repeats"]):
+        off_sum, w = _serve(p, model, params, cfg, None)
+        off_walls.append(w)
+        tracer = Tracer()
+        on_sum, w = _serve(p, model, params, cfg, tracer)
+        on_walls.append(w)
+
+    off_w, on_w = min(off_walls), min(on_walls)
+    overhead_pct = (on_w - off_w) / off_w * 100.0
+    same = _virtual_outcome(off_sum) == _virtual_outcome(on_sum)
+    mismatches = (off_sum["schedule_mismatches"]
+                  + on_sum["schedule_mismatches"])
+
+    # Trace round-trip: export -> load -> report must rebuild the fleet p95.
+    os.makedirs(common.RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(common.RESULTS_DIR, "trace.json")
+    write_chrome_trace(trace_path, tracer)
+    rep = obs_report.summarize(load_records(trace_path))
+    fleet_p95 = on_sum["latency_s"]["p95"]
+    trace_p95 = rep["latency"]["latency_s"]["p95"]
+    p95_err = (abs(trace_p95 - fleet_p95) / fleet_p95 if fleet_p95 else 0.0)
+
+    overhead_ok = overhead_pct < MAX_OVERHEAD_PCT
+    p95_ok = p95_err <= P95_TOLERANCE
+    rows = [
+        ("obs/disabled_wall_s", round(off_w, 4),
+         f"{p['requests']} requests, best of {p['repeats']}"),
+        ("obs/enabled_wall_s", round(on_w, 4),
+         f"spans={tracer.counts()['spans']} events={tracer.counts()['events']}"),
+        ("obs/overhead_pct", round(overhead_pct, 2),
+         f"< {MAX_OVERHEAD_PCT}%: {'PASS' if overhead_ok else 'FAIL'}"),
+        ("obs/identical_virtual_outcome", int(same),
+         f"mismatches={mismatches}: "
+         f"{'PASS' if same and mismatches == 0 else 'FAIL'}"),
+        ("obs/trace_report_p95_err", round(p95_err, 6),
+         f"trace {trace_p95:.6g} vs fleet {fleet_p95:.6g}, "
+         f"<= {P95_TOLERANCE:.0%}: {'PASS' if p95_ok else 'FAIL'}"),
+    ]
+    common.save_result("obs", {
+        "preset": preset,
+        "arch": p["arch"],
+        "repeats": p["repeats"],
+        "disabled_wall_s": off_walls,
+        "enabled_wall_s": on_walls,
+        "overhead_pct": overhead_pct,
+        "identical_virtual_outcome": same,
+        "schedule_mismatches": mismatches,
+        "trace_counts": tracer.counts(),
+        "fleet_p95_s": fleet_p95,
+        "trace_report_p95_s": trace_p95,
+        "trace_report_p95_err": p95_err,
+        "disabled_summary": _virtual_outcome(off_sum),
+        "enabled_summary": _virtual_outcome(on_sum),
+        "report_latency": rep["latency"],
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    args = ap.parse_args()
+    common.emit(run(args.preset),
+                "Observability overhead — tracing on vs off, trace fidelity")

@@ -21,6 +21,9 @@ from repro.core.autoscheduler import TracePoint, tune_model
 from repro.core.database import Record, ScheduleDB
 from repro.core.extract import extract_kernels
 from repro.core.tuner import arch_uses
+# The one quantile implementation (repro.obs) — benchmarks and the fleet
+# metrics share it, so bench numbers and serving summaries always agree.
+from repro.obs import percentile  # noqa: F401  (re-export)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 TUNING_DIR = os.path.join(RESULTS_DIR, "tuning")

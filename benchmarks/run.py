@@ -20,6 +20,7 @@ def main() -> None:
         bench_headline,
         bench_heuristic,
         bench_kernel_matrix,
+        bench_obs,
         bench_paged,
         bench_pool,
         bench_resnet,
@@ -48,6 +49,7 @@ def main() -> None:
         ("Serving fleet: router + demand-driven tuning", bench_fleet),
         ("Paged continuous batching vs fixed slots", bench_paged),
         ("Elastic autoscaling fleet vs fixed sizes", bench_autoscale),
+        ("Observability overhead + trace fidelity", bench_obs),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

@@ -46,6 +46,7 @@ from repro.core.schedule import (
     default_schedule,
 )
 from repro.core.workload import KernelInstance, KernelUse, dedup_uses
+from repro.obs import NULL_TRACER, MetricsRegistry
 from repro.targets import DEFAULT_TARGET, target_name
 
 #: Resolution tiers, strongest first.  ``exact``/``transfer`` come from the
@@ -181,7 +182,8 @@ class ResolutionPipeline:
     """
 
     def __init__(self, stages: Sequence[ResolutionStage], *,
-                 mode: str = "strict", target=None):
+                 mode: str = "strict", target=None,
+                 metrics: MetricsRegistry | None = None, tracer=None):
         if not stages:
             stages = [DefaultStage()]
         self.stages = list(stages)
@@ -194,11 +196,14 @@ class ResolutionPipeline:
         # misattribute bumps when several stages carry counters).
         self._stage_gens = tuple(st.generation() for st in self.stages)
         self._cache_gen = sum(self._stage_gens)
-        self._counters = {
-            "resolves": 0, "cache_hits": 0, "cache_misses": 0,
-            "stage_calls": 0, "migrated": 0, "invalidations": 0,
-            **{f"served_{t}": 0 for t in TIERS},
-        }
+        # Counters live in a metrics registry (private by default: one
+        # pipeline per replica, and same-named counters must not merge
+        # across replicas).  Owners rebind ``tracer`` post-construction.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._counters = self.metrics.group("resolution", [
+            "resolves", "cache_hits", "cache_misses", "stage_calls",
+            "migrated", "invalidations", *(f"served_{t}" for t in TIERS)])
 
     @staticmethod
     def build(schedule_map: Mapping[str, Schedule] | None = None,
@@ -267,6 +272,13 @@ class ResolutionPipeline:
             self._counters["stage_calls"] += walked
             self._counters[f"served_{res.tier}"] += 1
             self._cache[key] = res
+        # Only stage walks are traced: memoized hits are the hot path and
+        # would swamp the trace with identical records.
+        if self.tracer.enabled:
+            self.tracer.event("resolve", "resolution",
+                              key=instance.workload_key(), tier=res.tier,
+                              stage=res.stage, target=self.target,
+                              generation=gen)
         return res
 
     def get(self, instance: KernelInstance) -> ConcreteSchedule:

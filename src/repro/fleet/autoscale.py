@@ -34,6 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs import NULL_TRACER, MetricsRegistry
+
 
 @dataclasses.dataclass(frozen=True)
 class ScaleDecision:
@@ -71,7 +73,8 @@ class Autoscaler:
                  up_windows: int = 1, down_windows: int = 2,
                  queue_high: float = 2.0, shed_high: float = 0.0,
                  util_high: float = 0.9, util_low: float = 0.35,
-                 queue_low: float = 0.5, p95_rise: float = 0.5):
+                 queue_low: float = 0.5, p95_rise: float = 0.5,
+                 metrics: MetricsRegistry | None = None, tracer=None):
         if not 1 <= min_replicas <= max_replicas:
             raise ValueError("need 1 <= min_replicas <= max_replicas")
         if window_s <= 0 or cooldown_s < 0:
@@ -95,6 +98,29 @@ class Autoscaler:
         self._down_streak = 0
         self._last_scale_t: float | None = None
         self._prev_p95 = 0.0
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._bind_metrics(metrics if metrics is not None
+                           else MetricsRegistry())
+
+    def _bind_metrics(self, metrics: MetricsRegistry) -> None:
+        self.metrics = metrics
+        self._counters = metrics.group(
+            "autoscaler", ["evaluations", "scale_ups", "scale_downs",
+                           "holds"])
+
+    def bind_obs(self, tracer, metrics: MetricsRegistry) -> None:
+        """Re-home telemetry into the owner's tracer/registry.
+
+        Fleets construct their observability sinks after the controller is
+        built (``attach_autoscaler``), so the controller's counters move to
+        the fleet registry — carrying any evaluations already made.
+        """
+        self.tracer = tracer
+        old = {n: self._counters[n] for n in self._counters}
+        self._bind_metrics(metrics)
+        for n, v in old.items():
+            if v:
+                self._counters.inc(n, v)
 
     # -- pressure classification ----------------------------------------------
     def _up_reason(self, w: dict) -> str | None:
@@ -161,16 +187,25 @@ class Autoscaler:
         decision = ScaleDecision(t=now, action=action, reason=reason,
                                  replicas=replicas, window=window)
         self.decisions.append(decision)
+        self._counters["evaluations"] += 1
+        self._counters[{"up": "scale_ups", "down": "scale_downs",
+                        "hold": "holds"}[action]] += 1
+        if self.tracer.enabled:
+            self.tracer.event(
+                "scale_decision", "autoscaler", t=now, action=action,
+                reason=reason, replicas=replicas,
+                queue_depth_mean=window["queue_depth_mean"],
+                utilization_mean=window["utilization_mean"],
+                shed=window["shed"], p95=window["latency_s"]["p95"])
         return decision
 
     # -- telemetry ------------------------------------------------------------
     def stats(self) -> dict:
-        acts = [d.action for d in self.decisions]
         return {
-            "evaluations": len(self.decisions),
-            "scale_ups": acts.count("up"),
-            "scale_downs": acts.count("down"),
-            "holds": acts.count("hold"),
+            "evaluations": int(self._counters["evaluations"]),
+            "scale_ups": int(self._counters["scale_ups"]),
+            "scale_downs": int(self._counters["scale_downs"]),
+            "holds": int(self._counters["holds"]),
             "window_s": self.window_s,
             "cooldown_s": self.cooldown_s,
             "min_replicas": self.min_replicas,

@@ -57,6 +57,7 @@ from repro.fleet.metrics import FleetMetrics
 from repro.fleet.router import TIER_SCORE, QueueFull, RequestRouter
 from repro.fleet.traffic import FleetRequest
 from repro.kernels.ops import ScheduleProvider
+from repro.obs import NULL_TRACER, MetricsRegistry
 from repro.serving import PagedServingEngine, ServingEngine
 from repro.targets import DEFAULT_TARGET, target_name
 
@@ -79,9 +80,14 @@ class Replica:
         self.engine = engine
         self.service = service
         self.target = target
+        # Observability rides the engine's binding (the fleet sets it before
+        # wrapping); bare engines fall back to the no-op tracer.
+        self.tracer = getattr(engine, "tracer", NULL_TRACER)
+        self.track = getattr(engine, "trace_track", f"replica-{idx}")
         self.time = 0.0
         self.busy = False
         self.step_pending = False
+        self._step_t0 = 0.0
         self.requests_admitted = 0
         # Lifecycle: active (serving) -> draining (no new dispatch, in-flight
         # finishing) -> retired (empty, clock stopped).  Indices are stable:
@@ -212,7 +218,15 @@ class Replica:
         req.replica = self.idx
         req.exact_share_at_admit = self.prefill_exact_share(req.bucket)
         self.requests_admitted += 1
-        self.time = max(self.time, now) + self.prefill_cost(req.bucket)
+        t0 = max(self.time, now)
+        self.time = t0 + self.prefill_cost(req.bucket)
+        # The slot engine prefills synchronously: the first token exists
+        # the instant the prefill's virtual time elapses.
+        req.prefill_done_s = self.time
+        if self.tracer.enabled:
+            self.tracer.add_span("prefill", self.track, t0, self.time,
+                                 uid=req.uid, bucket=req.bucket,
+                                 target=self.target)
         self.busy, self.step_pending = True, False
         if not engine_req.done:
             self._fleet_reqs[engine_req.uid] = req
@@ -227,11 +241,16 @@ class Replica:
             fr = self._fleet_reqs.pop(er.uid)
             fr.tokens = len(er.generated)
             out.append(fr)
+        if self.tracer.enabled:
+            self.tracer.add_span("decode_step", self.track, self._step_t0,
+                                 now, active=len(self.engine.active),
+                                 finished=len(out))
         return out
 
     def start_step(self, now: float) -> None:
         self.time = now + self.decode_cost()
         self.busy, self.step_pending = True, True
+        self._step_t0 = now
 
     def stats(self) -> dict:
         plan = self.engine.plan
@@ -305,9 +324,57 @@ class PagedReplica(Replica):
         self._fleet_reqs[engine_req.uid] = req
         return engine_req
 
+    def complete_step(self, now: float) -> list[FleetRequest]:
+        """Run the iteration that virtually ends at ``now``.
+
+        The engine's scheduler is pure, so previewing ``planned_work()``
+        here sees exactly the chunks and decode lanes the step is about to
+        run — the preview lays the iteration's child spans out on the
+        virtual clock (chunks sequentially, then the batched decode), and
+        marks each request's first-token instant for TTFT accounting.
+        """
+        tracing = self.tracer.enabled
+        work = self.engine.planned_work() if tracing else None
+        finished = self.engine.step()
+        self.busy = self.step_pending = False
+        out = []
+        for er in finished:
+            fr = self._fleet_reqs.pop(er.uid)
+            fr.tokens = len(er.generated)
+            if fr.prefill_done_s is None:
+                fr.prefill_done_s = now
+            out.append(fr)
+        # First generated token for requests still in flight: their prefill
+        # chunks all ran inside this iteration.
+        active = self.engine.active
+        for uid, fr in self._fleet_reqs.items():
+            if fr.prefill_done_s is None:
+                er = active.get(uid)
+                if er is not None and er.generated:
+                    fr.prefill_done_s = now
+        if tracing:
+            parent = self.tracer.add_span(
+                "step", self.track, self._step_t0, now,
+                chunks=len(work["chunk_lens"]), decode=work["decode"],
+                active=len(active), finished=len(out))
+            # Child spans re-derive the step layout from the same costs
+            # start_step charged; clamp to ``now`` against float drift.
+            t = self._step_t0
+            for c in work["chunk_lens"]:
+                t1 = min(t + self.prefill_cost(c), now)
+                self.tracer.add_span("chunk", self.track, min(t, t1), t1,
+                                     parent=parent, len=c)
+                t = t1
+            if work["decode"]:
+                t1 = max(t, min(t + self.decode_cost(), now))
+                self.tracer.add_span("decode", self.track, t, t1,
+                                     parent=parent)
+        return out
+
     def start_step(self, now: float) -> None:
         self.time = now + self.expected_step_s()
         self.busy, self.step_pending = True, True
+        self._step_t0 = now
 
     def stats(self) -> dict:
         out = super().stats()
@@ -353,7 +420,8 @@ class ServingFleet:
                  tuning_budget_s: float = float("inf"),
                  drain_jobs: int = 2, drain_every: int = 4,
                  autoscaler=None, min_replicas: int = 1,
-                 seed: int = 0, extras: dict | None = None):
+                 seed: int = 0, extras: dict | None = None,
+                 tracer=None, metrics: MetricsRegistry | None = None):
         if engine not in ("slot", "paged"):
             raise ValueError(f"unknown engine {engine!r}: 'slot' or 'paged'")
         self.engine_kind = engine
@@ -361,6 +429,18 @@ class ServingFleet:
             raise ValueError("need at least one replica")
         self.cfg = cfg
         self.registry = registry
+        # Observability first: services and replicas constructed below bind
+        # to the fleet tracer/registry, and the tracer's clock closes over
+        # ``_now`` (the discrete-event virtual instant).
+        self._now = 0.0
+        self.obs = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled:
+            self.tracer.set_clock(lambda: self._now)
+            for i in range(replicas):  # display order: replicas first
+                self.tracer.track(f"replica-{i}")
+            self.tracer.track("router")
+            self.tracer.track("autoscaler")
         self.prefetch = prefetch
         self.prefetch_buckets = prefetch_buckets
         self.drain_jobs = drain_jobs
@@ -398,8 +478,9 @@ class ServingFleet:
 
         self.demand = DemandTracker(bucket_for=self.replicas[0].bucket_for)
         self.router = RequestRouter(self.replicas, policy=policy,
-                                    queue_cap=queue_cap, demand=self.demand)
-        self.metrics = FleetMetrics()
+                                    queue_cap=queue_cap, demand=self.demand,
+                                    metrics=self.obs, tracer=self.tracer)
+        self.metrics = FleetMetrics(metrics=self.obs)
         #: One untuned decode step of the reference replica — the trace's
         #: time unit (TrafficGenerator ``tick_s``).
         self.tick_s = self.replicas[0].untuned_decode_cost()
@@ -408,7 +489,6 @@ class ServingFleet:
         #: Lifecycle audit trail: one dict per warm-join / retire.
         self.scale_events: list[dict] = []
         self._events = 0
-        self._now = 0.0
         self._next_eval: float | None = None
         if autoscaler is not None:
             self.attach_autoscaler(autoscaler)
@@ -423,6 +503,9 @@ class ServingFleet:
         self.autoscaler = autoscaler
         self.min_replicas = autoscaler.min_replicas
         self._next_eval = self._now + autoscaler.window_s
+        bind = getattr(autoscaler, "bind_obs", None)
+        if bind is not None:  # controller telemetry joins the fleet's sinks
+            bind(self.tracer, self.obs)
 
     # -- replica construction --------------------------------------------------
     def _service_for(self, target: str):
@@ -436,6 +519,7 @@ class ServingFleet:
                 self.registry, model_id=f"fleet/{self.cfg.name}",
                 runner=CachedRunner(AnalyticalRunner(target)),
                 max_workers=0, probe_candidates=0, target=target,
+                metrics=self.obs, tracer=self.tracer,
                 **self._svc_kw)
         return svc
 
@@ -451,6 +535,9 @@ class ServingFleet:
         svc = self._service_for(target)
         provider = (ScheduleProvider(service=svc) if svc is not None
                     else ScheduleProvider(target=target))
+        pipeline = getattr(provider, "pipeline", None)
+        if pipeline is not None:
+            pipeline.tracer = self.tracer
         if self.engine_kind == "paged":
             eng = PagedServingEngine(
                 mk["model"], mk["params"],
@@ -461,11 +548,22 @@ class ServingFleet:
                 admit_cap=mk["admit_cap"],
                 defrag_threshold=mk["defrag_threshold"],
                 provider=provider)
+            self._bind_engine_obs(eng, idx)
             return PagedReplica(idx, self.cfg, eng, svc, target)
         eng = ServingEngine(mk["model"], mk["params"], slots=mk["slots"],
                             max_len=mk["max_len"], extras=mk["extras"],
                             provider=provider)
+        self._bind_engine_obs(eng, idx)
         return Replica(idx, self.cfg, eng, svc, target)
+
+    def _bind_engine_obs(self, eng, idx: int) -> None:
+        """Point the engine at the fleet tracer *before* the Replica wrapper
+        reads the binding.  Compute spans are disabled: under the virtual
+        clock a jitted call is zero-width — the replica emits the
+        virtual-time step spans instead."""
+        eng.tracer = self.tracer
+        eng.trace_track = f"replica-{idx}"
+        eng.trace_compute = False
 
     @property
     def services(self) -> dict:
@@ -513,6 +611,11 @@ class ServingFleet:
             "t": now, "action": "join", "replica": r.idx, "target": t,
             "pre_join_exact_share": pre_share,
             "join_exact_share": join_share})
+        if self.tracer.enabled:
+            self.tracer.track(r.track)
+            self.tracer.event("join", "autoscaler", t=now, replica=r.idx,
+                              target=t, pre_join_exact_share=pre_share,
+                              join_exact_share=join_share)
         return r
 
     def retire_replica(self, idx: int, *, now: float | None = None) -> Replica:
@@ -548,6 +651,10 @@ class ServingFleet:
         self.scale_events.append({
             "t": now, "action": "retire", "replica": idx, "target": r.target,
             "requeued": len(requeued), "in_flight": len(r._fleet_reqs)})
+        if self.tracer.enabled:
+            self.tracer.event("retire", "autoscaler", t=now, replica=idx,
+                              target=r.target, requeued=len(requeued),
+                              in_flight=len(r._fleet_reqs))
         if not r.busy and not r.engine.active:
             self._finalize_retire(r, now)
         return r
@@ -556,6 +663,9 @@ class ServingFleet:
         r.state = "retired"
         r.retired_s = now
         r.busy = r.step_pending = False
+        if self.tracer.enabled:
+            self.tracer.event("retired", "autoscaler", t=now, replica=r.idx,
+                              target=r.target)
         # Pending tuning jobs for this target are demand the fleet no longer
         # has capacity to exploit — cancel them, but only when no live
         # replica still serves the target (the queue is shared per target).
@@ -618,6 +728,37 @@ class ServingFleet:
             svc.drain(max_jobs=self.drain_jobs)
 
     # -- the serve loop --------------------------------------------------------
+    def _complete(self, fr: FleetRequest, now: float) -> None:
+        self.metrics.record_completion(fr, now)
+        if self.tracer.enabled:
+            self._trace_request(fr)
+
+    def _trace_request(self, fr: FleetRequest) -> None:
+        """Emit the request's lifecycle as async spans on its replica track.
+
+        Four spans share ``cat="request"`` and ``id=uid`` so Perfetto nests
+        them on one async track even when requests overlap: ``request``
+        covers arrival→finish, with ``queue``/``prefill``/``decode`` slicing
+        it at the admission and first-token instants.  The intervals are the
+        exact ones :class:`FleetMetrics` aggregates, so a report computed
+        from the trace reproduces the fleet's latency percentiles.
+        """
+        if fr.admitted_s is None or fr.finished_s is None:
+            return
+        track = (self.replicas[fr.replica].track if fr.replica is not None
+                 else "router")
+        uid = str(fr.uid)
+        t_arr, t_adm, t_fin = fr.arrival_s, fr.admitted_s, fr.finished_s
+        pd = fr.prefill_done_s
+        pd = t_adm if pd is None else min(max(pd, t_adm), t_fin)
+        add = self.tracer.add_async_span
+        add("request", track, t_arr, t_fin, "request", uid, uid=fr.uid,
+            bucket=fr.bucket, replica=fr.replica, tokens=fr.tokens,
+            latency_s=t_fin - t_arr)
+        add("queue", track, t_arr, t_adm, "request", uid, uid=fr.uid)
+        add("prefill", track, t_adm, pd, "request", uid, uid=fr.uid)
+        add("decode", track, pd, t_fin, "request", uid, uid=fr.uid)
+
     def _admit(self, req: FleetRequest, idx: int) -> bool:
         replica = self.replicas[idx]
         try:
@@ -628,12 +769,15 @@ class ServingFleet:
             # placement so it is not counted as dispatched).
             req.shed = "invalid"
             self.metrics.record_shed(req, self._now)
+            if self.tracer.enabled:
+                self.tracer.event("shed", "router", uid=req.uid,
+                                  reason="invalid", replica=idx)
             return False
         if engine_req.done:
             # Finished by the prefill itself (max_new_tokens=0 / prefill
             # EOS): completes when its prefill's virtual time elapses.
             req.tokens = len(engine_req.generated)
-            self.metrics.record_completion(req, replica.time)
+            self._complete(req, replica.time)
         return True
 
     def _eligible(self) -> list[int]:
@@ -685,7 +829,7 @@ class ServingFleet:
                 if r.busy and r.time <= now + 1e-12:
                     if r.step_pending:
                         for fr in r.complete_step(now):
-                            self.metrics.record_completion(fr, now)
+                            self._complete(fr, now)
                     else:
                         r.busy = False  # prefill done; slot batch continues
                 if r.state == "draining" and not r.busy \

@@ -4,6 +4,14 @@ All times are *virtual seconds* (cost-model kernel time — see DESIGN.md §2);
 latencies are also reported in *ticks* (one tick = the untuned decode-step
 cost of the reference replica) so numbers are comparable across archs.
 
+Every number lives in a :class:`repro.obs.MetricsRegistry` under the
+``fleet.*`` namespace (counters ``fleet.requests_completed`` /
+``fleet.requests_shed`` / ``fleet.tokens``, histogram ``fleet.latency_s``,
+gauges ``fleet.queue_depth`` / ``fleet.utilization``), so ``--metrics-out``
+exports the same values :meth:`FleetMetrics.summary` prints.  Gauge samples
+require their timestamp — an unstamped sample cannot be windowed and used
+to silently misfile into the first window.
+
 Beyond the whole-run :meth:`FleetMetrics.summary`, metrics are queryable per
 time window: :meth:`FleetMetrics.window` summarizes one ``[t0, t1)`` slice
 (completions, sheds, p50/p95, queue depth, replica utilization) and
@@ -13,27 +21,23 @@ benchmark's per-phase comparison read the identical numbers.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.fleet.traffic import FleetRequest
-
-
-def percentile(xs: list[float], q: float) -> float:
-    """q-th percentile (0..100, linear interpolation); 0.0 when empty."""
-    if not xs:
-        return 0.0
-    return float(np.percentile(xs, q))
+from repro.obs import MetricsRegistry, percentile  # noqa: F401  (re-export)
 
 
 class FleetMetrics:
     """Accumulates per-request outcomes and timestamped gauge samples."""
 
-    def __init__(self) -> None:
+    def __init__(self, metrics: MetricsRegistry | None = None) -> None:
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.completed: list[FleetRequest] = []
         self.shed: list[FleetRequest] = []
-        self.queue_samples: list[tuple[float, int]] = []      # (t, depth)
-        self.util_samples: list[tuple[float, float]] = []     # (t, mean util)
-        self.tokens = 0
+        self._completed_c = self.metrics.counter("fleet.requests_completed")
+        self._shed_c = self.metrics.counter("fleet.requests_shed")
+        self._tokens_c = self.metrics.counter("fleet.tokens")
+        self._latency_h = self.metrics.histogram("fleet.latency_s")
+        self._queue_g = self.metrics.gauge("fleet.queue_depth")
+        self._util_g = self.metrics.gauge("fleet.utilization")
         self.makespan_s = 0.0
         # padding-waste ledger: prompt tokens the engines actually needed vs
         # tokens they computed (slot-engine prefill buckets pad; the paged
@@ -44,22 +48,38 @@ class FleetMetrics:
         # observation — stranded capacity is the gap between the two
         self.capacity_samples: list[tuple[int, int]] = []
 
+    @property
+    def tokens(self) -> int:
+        return int(self._tokens_c.value)
+
+    @property
+    def queue_samples(self) -> list[tuple[float, float]]:
+        return self._queue_g.samples
+
+    @property
+    def util_samples(self) -> list[tuple[float, float]]:
+        return self._util_g.samples
+
     def record_completion(self, req: FleetRequest, now: float) -> None:
         req.finished_s = now
         self.completed.append(req)
-        self.tokens += req.tokens
+        self._completed_c.inc()
+        self._tokens_c.inc(req.tokens)
+        if req.latency_s is not None:
+            self._latency_h.observe(req.latency_s)
         self.makespan_s = max(self.makespan_s, now)
 
     def record_shed(self, req: FleetRequest, now: float | None = None) -> None:
         req.shed_s = now if now is not None else req.arrival_s
         self.shed.append(req)
+        self._shed_c.inc()
 
-    def sample_queue(self, depth: int, now: float = 0.0) -> None:
-        self.queue_samples.append((now, depth))
+    def sample_queue(self, depth: int, now: float) -> None:
+        self._queue_g.sample(depth, now)
 
-    def sample_utilization(self, util: float, now: float = 0.0) -> None:
+    def sample_utilization(self, util: float, now: float) -> None:
         """Sample mean replica utilization (0..1) at an event point."""
-        self.util_samples.append((now, util))
+        self._util_g.sample(util, now)
 
     def record_padding(self, true_tokens: int, padded_tokens: int) -> None:
         """Account one prefill: tokens the prompt needed vs tokens computed."""
@@ -84,8 +104,8 @@ class FleetMetrics:
         shed = [r for r in self.shed
                 if r.shed_s is not None and t0 <= r.shed_s < t1]
         lats = [r.latency_s for r in done if r.latency_s is not None]
-        qs = [d for t, d in self.queue_samples if t0 <= t < t1]
-        us = [u for t, u in self.util_samples if t0 <= t < t1]
+        qs = self._queue_g.values(t0, t1)
+        us = self._util_g.values(t0, t1)
         n_seen = len(done) + len(shed)
         return {
             "t0": t0,

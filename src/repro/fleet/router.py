@@ -34,6 +34,7 @@ from typing import Callable, Sequence
 
 from repro.core.resolution import TIERS
 from repro.fleet.traffic import FleetRequest
+from repro.obs import NULL_TRACER, MetricsRegistry
 
 #: Tier quality used by plan-aware routing: strongest tier scores highest
 #: (exact=3 .. default=0), derived from the resolution pipeline's order.
@@ -162,7 +163,8 @@ class RequestRouter:
 
     def __init__(self, replicas: Sequence, *,
                  policy: "str | DispatchPolicy" = "round_robin",
-                 queue_cap: int = 64, demand=None):
+                 queue_cap: int = 64, demand=None,
+                 metrics: MetricsRegistry | None = None, tracer=None):
         if queue_cap <= 0:
             raise ValueError("queue_cap must be positive")
         self.replicas = list(replicas)
@@ -175,8 +177,11 @@ class RequestRouter:
         #: Requests shed for a passed deadline during the latest dispatch
         #: (callers fold them into their metrics after each call).
         self.last_shed_deadline: list[FleetRequest] = []
-        self.counters = {"submitted": 0, "shed_queue_full": 0,
-                         "shed_deadline": 0, "dispatched": 0}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.counters = self.metrics.group(
+            "router", ["submitted", "shed_queue_full", "shed_deadline",
+                       "dispatched"])
 
     @property
     def depth(self) -> int:
@@ -222,10 +227,16 @@ class RequestRouter:
         if len(self.queue) >= self.queue_cap:
             req.shed = "queue_full"
             self.counters["shed_queue_full"] += 1
+            if self.tracer.enabled:
+                self.tracer.event("shed", "router", uid=req.uid,
+                                  reason="queue_full", depth=len(self.queue))
             raise QueueFull(
                 f"admission queue at capacity ({self.queue_cap})")
         self.queue.append(req)
         self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
+        if self.tracer.enabled:
+            self.tracer.event("submit", "router", uid=req.uid,
+                              depth=len(self.queue))
 
     # -- dispatch --------------------------------------------------------------
     def dispatch(self, now: float = 0.0, *,
@@ -250,6 +261,9 @@ class RequestRouter:
                 self.queue.popleft()
                 req.shed = "deadline"
                 self.counters["shed_deadline"] += 1
+                if self.tracer.enabled:
+                    self.tracer.event("shed", "router", t=now, uid=req.uid,
+                                      reason="deadline")
                 shed_deadline.append(req)
                 continue
             if callable(eligible):
@@ -274,6 +288,9 @@ class RequestRouter:
             if placed is False:
                 continue
             self.counters["dispatched"] += 1
+            if self.tracer.enabled:
+                self.tracer.event("dispatch", "router", t=now, uid=req.uid,
+                                  replica=idx, policy=self.policy.name)
             out.append((req, idx))
         self.last_shed_deadline = shed_deadline
         return out

@@ -57,6 +57,7 @@ class FleetRequest:
     bucket: int = 0                  # prefill bucket the demand tracker keyed
     replica: int | None = None
     admitted_s: float | None = None
+    prefill_done_s: float | None = None  # first generated token available
     finished_s: float | None = None
     shed: str = ""                   # "" | "queue_full" | "deadline" | "invalid"
     shed_s: float | None = None      # virtual instant the shed happened

@@ -27,6 +27,10 @@ composition, and re-plan count.
 chip never silently serve another); ``--tuning-donor-target`` optionally
 draws transfer donors from a different chip's namespace (explicit
 cross-target serving, re-validated under ``--target``'s spec).
+
+``--trace-out trace.json`` records wall-clock spans around the real jitted
+prefill/decode steps plus resolution/replan events (Perfetto-loadable;
+DESIGN.md §10); ``--metrics-out`` dumps the resolution metrics registry.
 """
 from __future__ import annotations
 
@@ -93,6 +97,11 @@ def main(argv=None) -> dict:
                     help="request-stream seed (shared sampler with the fleet "
                          "traffic generator): runs are reproducible per seed "
                          "but vary across seeds")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto-loadable Chrome trace (wall-clock "
+                         "spans around the real jitted prefill/decode steps)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the engine's resolution metrics as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -117,6 +126,15 @@ def main(argv=None) -> dict:
     engine = ServingEngine(
         model, params, slots=args.slots, max_len=args.max_len, extras=extras,
         provider=provider if args.backend == "pallas" else None)
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        # A standalone engine has no virtual clock: spans are wall-clock
+        # around the real jitted steps (engine.trace_compute default).
+        tracer = Tracer()
+        engine.tracer = tracer
+        provider.pipeline.tracer = tracer
     rng = np.random.default_rng(args.seed)
     pending = sample_prompts(rng, args.requests, cfg.vocab_size)
     done, t0, steps = [], time.monotonic(), 0
@@ -157,6 +175,14 @@ def main(argv=None) -> dict:
                           "tiers": engine.plan.tier_counts()}
     if service is not None:
         result["tuning_service"] = service.stats()
+    if tracer is not None:
+        from repro.obs.export import write_chrome_trace
+
+        write_chrome_trace(args.trace_out, tracer)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(provider.pipeline.metrics.to_json(), f, indent=1,
+                      sort_keys=True)
     print(json.dumps(result))
     return result
 

@@ -31,6 +31,13 @@ pressure and drain-retires them (down to ``--min-replicas``) when quiet;
 the load shapes the controller is built for; ``--save-trace`` records the
 generated stream and ``--replay-trace`` replays a recorded one verbatim.
 See DESIGN.md §9.
+
+``--trace-out trace.json`` records every span/event of the run — request
+queue→prefill→decode lifecycles per replica track, engine iterations,
+tuning jobs, router and autoscaler decisions — as a Chrome trace on the
+fleet's virtual clock (open it at https://ui.perfetto.dev, or feed it to
+``python -m repro.launch.trace_report``); ``--metrics-out`` dumps the
+fleet-wide metrics registry.  See DESIGN.md §10.
 """
 from __future__ import annotations
 
@@ -130,6 +137,11 @@ def main(argv=None) -> dict:
                     help="record the generated request trace to this file")
     ap.add_argument("--replay-trace", default="",
                     help="replay a recorded trace instead of generating one")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto-loadable Chrome trace of the run "
+                         "(virtual-clock spans; open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the fleet-wide metrics registry as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -163,13 +175,18 @@ def main(argv=None) -> dict:
                      "page_size": args.page_size,
                      "pool_pages": args.pool_pages, "chunk": args.chunk,
                      "defrag_threshold": args.defrag_threshold}
+    from repro.obs import Tracer
+    from repro.obs.export import write_chrome_trace
+
+    tracer = Tracer() if args.trace_out else None
     fleet = ServingFleet(
         cfg, model, params, replicas=args.replicas, slots=args.slots,
         max_len=args.max_len, engine=args.engine, registry=registry,
         policy=args.policy, queue_cap=args.queue_cap,
         prefetch=args.prefetch, targets=targets,
         donor_target=args.donor_target, tuning_budget_s=args.tuning_budget_s,
-        drain_jobs=args.drain_jobs, seed=args.seed, extras=extras, **engine_kw)
+        drain_jobs=args.drain_jobs, seed=args.seed, extras=extras,
+        tracer=tracer, **engine_kw)
     if args.autoscale:
         fleet.attach_autoscaler(Autoscaler(
             min_replicas=args.min_replicas, max_replicas=args.max_replicas,
@@ -199,7 +216,12 @@ def main(argv=None) -> dict:
     try:
         summary = fleet.serve(trace)
     finally:
-        fleet.close()
+        fleet.close()  # close first: pending-job cancel events land in trace
+        if tracer is not None:
+            write_chrome_trace(args.trace_out, tracer)
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(fleet.obs.to_json(), f, indent=1, sort_keys=True)
         if tmp_root is not None:
             shutil.rmtree(tmp_root, ignore_errors=True)
     print(json.dumps(summary))

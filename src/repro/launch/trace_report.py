@@ -1,0 +1,94 @@
+"""Offline trace analysis CLI: latency breakdown, tier shares, tuning jobs.
+
+Reads a trace written by ``--trace-out`` (Chrome trace JSON or the flat
+JSONL form — :func:`repro.obs.export.load_records` detects which) and
+prints the run's story:
+
+* **latency breakdown** — p50/p95/p99 (and means) of end-to-end latency,
+  queue wait, TTFT (queue + prefill), and decode time, over exactly the
+  arrival→finish intervals the fleet's own metrics aggregate — the printed
+  p95 reproduces ``FleetMetrics.summary()``'s;
+* **tier shares over time** — the resolution-tier mix (exact / transfer /
+  static / default) per time slice, extracted from the tuning-service
+  lookup events: the "exact share climbs as background tuning publishes"
+  curve of the paper, recovered from any saved trace;
+* **tuning jobs** — per-job claim time and virtual search cost;
+* **scale timeline** — autoscaler decisions and replica join/retire
+  transitions, in order.
+
+    PYTHONPATH=src python -m repro.launch.trace_report trace.json
+    PYTHONPATH=src python -m repro.launch.trace_report trace.json --json
+
+``--json`` emits the full :func:`repro.obs.report.summarize` object for
+machine consumption; the default output is a compact human-readable text
+report.  See DESIGN.md §10.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.obs import report
+from repro.obs.export import load_records
+
+
+def _fmt_quantiles(name: str, q: dict) -> str:
+    return (f"  {name:<10} mean {q['mean']:.6f}  p50 {q['p50']:.6f}  "
+            f"p95 {q['p95']:.6f}  p99 {q['p99']:.6f}")
+
+
+def format_report(summary: dict) -> str:
+    """Render :func:`repro.obs.report.summarize` output as text."""
+    lines = []
+    lat = summary["latency"]
+    lines.append(f"requests: {lat['requests']} completed, {lat['shed']} shed")
+    lines.append("latency breakdown (virtual seconds):")
+    for name in ("latency_s", "queue_s", "ttft_s", "decode_s"):
+        lines.append(_fmt_quantiles(name, lat[name]))
+    shares = summary["tier_shares"]
+    if shares:
+        lines.append("resolution tier shares over time:")
+        for w in shares:
+            mix = "  ".join(f"{t}={s:.2f}" for t, s in w["shares"].items())
+            lines.append(f"  [{w['t0']:.4f}, {w['t1']:.4f})  "
+                         f"{w['lookups']:>4} lookups  {mix}")
+    jobs = summary["tuning_jobs"]
+    if jobs:
+        total = sum(j["duration_s"] for j in jobs)
+        lines.append(f"tuning jobs: {len(jobs)}  "
+                     f"(total search {total:.3f}s)")
+        for j in jobs:
+            lines.append(f"  t={j['t0']:.4f}  {j['duration_s']:.4f}s  "
+                         f"{j['key']}")
+    timeline = summary["scale_timeline"]
+    if timeline:
+        lines.append("scale timeline:")
+        for e in timeline:
+            detail = "  ".join(f"{k}={v}" for k, v in sorted(e.items())
+                               if k not in ("t", "name"))
+            lines.append(f"  t={e['t']:.4f}  {e['name']:<14} {detail}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description="summarize a --trace-out trace: latency breakdown, "
+                    "tier shares over time, tuning jobs, scale timeline")
+    ap.add_argument("trace", help="Chrome trace JSON or JSONL record file")
+    ap.add_argument("--windows", type=int, default=8,
+                    help="time slices for the tier-share series")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full summary object as JSON")
+    args = ap.parse_args(argv)
+
+    records = load_records(args.trace)
+    summary = report.summarize(records, windows=args.windows)
+    if args.json:
+        print(json.dumps(summary, indent=1, sort_keys=True))
+    else:
+        print(format_report(summary))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

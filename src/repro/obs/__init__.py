@@ -1,0 +1,33 @@
+"""Unified observability: virtual-clock tracing, metrics, trace export.
+
+See DESIGN.md §10.  Producers record through a :class:`Tracer` (default
+:data:`NULL_TRACER`, a no-op costing one attribute check) and a
+:class:`MetricsRegistry`; consumers export Chrome trace-event JSON for
+Perfetto or JSON-lines for ``launch/trace_report.py``.
+"""
+from .metrics import (
+    Counter,
+    CounterGroup,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    percentile,
+)
+from .tracer import NULL_TRACER, Event, NullTracer, Span, Tracer
+from .export import (
+    chrome_trace,
+    load_records,
+    read_jsonl,
+    write_chrome_trace,
+    write_jsonl,
+)
+from . import report
+
+__all__ = [
+    "Counter", "CounterGroup", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "percentile",
+    "NULL_TRACER", "Event", "NullTracer", "Span", "Tracer",
+    "chrome_trace", "load_records", "read_jsonl", "write_chrome_trace",
+    "write_jsonl", "report",
+]

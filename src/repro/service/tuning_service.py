@@ -39,6 +39,7 @@ from repro.core.runner import MeasureRunner, resolve_runner
 from repro.core.schedule import Schedule, ScheduleInvalid
 from repro.core.transfer import _strongest_first, transfer_tune
 from repro.core.workload import KernelInstance, KernelUse
+from repro.obs import NULL_TRACER, MetricsRegistry
 from repro.targets import target_name
 
 
@@ -94,7 +95,8 @@ class TuningService:
                  donors: Sequence[str] | None = None,
                  budget_s: float = float("inf"), max_workers: int = 2,
                  probe_candidates: int | None = 4,
-                 target=None, donor_target=None):
+                 target=None, donor_target=None,
+                 metrics: MetricsRegistry | None = None, tracer=None):
         self.registry = registry
         self.model_id = model_id
         self.runner, self.target = resolve_runner(runner, target)
@@ -122,13 +124,21 @@ class TuningService:
         # Publish log for changed-workload notification: (generation before,
         # generation after, workload key) per publish this service performed.
         self._pub_events: list[tuple[int, int, str]] = []
-        self._counters = {
-            "lookups": 0, "exact_hits": 0, "transfer_hits": 0,
-            "default_misses": 0, "jobs_enqueued": 0, "jobs_deduped": 0,
-            "jobs_rejected_budget": 0, "jobs_completed": 0, "jobs_failed": 0,
-            "upgrades": 0, "publish_skipped": 0, "prefetches": 0,
-            "jobs_cancelled": 0,
-        }
+        # Counters are registry-backed (namespaced by target so a fleet's
+        # per-target services share one registry without colliding); the
+        # tracer records the tuning timeline (lookups, job spans, publishes)
+        # on the ``tuning/<target>`` track.  Increments stay guarded by
+        # ``_lock`` exactly as the plain-dict versions were.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_track = f"tuning/{self.target}"
+        self._counters = self.metrics.group(f"tuning.{self.target}", [
+            "lookups", "exact_hits", "transfer_hits", "default_misses",
+            "jobs_enqueued", "jobs_deduped", "jobs_rejected_budget",
+            "jobs_completed", "jobs_failed", "upgrades", "publish_skipped",
+            "prefetches", "jobs_cancelled"])
+        self._job_hist = self.metrics.histogram(
+            f"tuning.{self.target}.job_search_s")
 
     # -- lookup ---------------------------------------------------------------
     def _donor_models(self, db: ScheduleDB) -> list[str]:
@@ -164,6 +174,7 @@ class TuningService:
                 continue
             with self._lock:
                 self._counters["exact_hits"] += 1
+            self._trace_lookup(instance, "exact", snap.generation)
             return LookupResult(exact.schedule, "exact", secs, untuned,
                                 exact.model_id, snap.generation)
 
@@ -199,12 +210,21 @@ class TuningService:
                 secs = self.runner.seconds(instance, best.schedule, mode=self.mode)
                 with self._lock:
                     self._counters["transfer_hits"] += 1
+                self._trace_lookup(instance, "transfer", snap.generation)
                 return LookupResult(best.schedule, "transfer", secs, untuned,
                                     best.model_id, snap.generation)
 
         with self._lock:
             self._counters["default_misses"] += 1
+        self._trace_lookup(instance, "default", snap.generation)
         return LookupResult(None, "default", untuned, untuned, "", snap.generation)
+
+    def _trace_lookup(self, instance: KernelInstance, tier: str,
+                      generation: int) -> None:
+        if self.tracer.enabled:
+            self.tracer.event("lookup", self.trace_track,
+                              key=instance.workload_key(), tier=tier,
+                              target=self.target, generation=generation)
 
     # -- background jobs ------------------------------------------------------
     def _enqueue(self, instance: KernelInstance, *,
@@ -233,6 +253,9 @@ class TuningService:
             job = _Job(instance, priority=priority, seq=self._job_seq)
             self._jobs[key] = job
             self._counters["jobs_enqueued"] += 1
+            if self.tracer.enabled:
+                self.tracer.event("enqueue", self.trace_track, key=key,
+                                  priority=priority)
             if self._pool is not None:
                 # The worker claims the best *unstarted* job at run time
                 # rather than being bound to this key: a priority queue in
@@ -281,6 +304,8 @@ class TuningService:
             for k in keys:
                 del self._jobs[k]
             self._counters["jobs_cancelled"] += len(keys)
+        if keys and self.tracer.enabled:
+            self.tracer.event("cancel", self.trace_track, jobs=len(keys))
         return len(keys)
 
     def _claim_best_locked(self) -> str | None:
@@ -318,6 +343,7 @@ class TuningService:
                 return False
             job.started = True
         instance = job.instance
+        claim_t = self.tracer.now() if self.tracer.enabled else 0.0
         try:
             snap = self.registry.snapshot()
             db = snap.db(None)
@@ -336,6 +362,16 @@ class TuningService:
             with self._lock:
                 self._counters["jobs_completed"] += 1
                 self.completed_order.append(key)
+            self._job_hist.observe(res.search_time_s)
+            if self.tracer.enabled:
+                # The span covers the job's *virtual search cost* from its
+                # claim instant — the duration the budget was charged.
+                self.tracer.add_async_span(
+                    "tune", self.trace_track, claim_t,
+                    claim_t + res.search_time_s, "tune", key, key=key,
+                    priority=job.priority, published=published,
+                    search_s=res.search_time_s, target=self.target,
+                    donor_target=self.donor_target)
             return published
         except Exception:
             with self._lock:
@@ -375,6 +411,12 @@ class TuningService:
                 self._counters["upgrades"] += 1
                 self._pub_events.append((gen_before, gen_after, key))
                 del self._pub_events[:-512]
+            if self.tracer.enabled:
+                self.tracer.event(
+                    "publish", self.trace_track,
+                    key=instance.workload_key(), seconds=seconds,
+                    donor=donor, gen_before=gen_before, gen_after=gen_after,
+                    target=self.target, donor_target=self.donor_target)
             return True
 
     # -- generation / change notification -------------------------------------

@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core.resolution import ExecutionPlan, plan_serving
 from repro.models.build import Model
+from repro.obs import NULL_TRACER
 
 
 class SlotsFull(RuntimeError):
@@ -99,6 +100,15 @@ class ServingEngine:
         # (the paged engine's chunked prefill holds these equal)
         self.prefill_true_tokens = 0
         self.prefill_padded_tokens = 0
+
+        # Observability: the owner (fleet / launch driver) rebinds these
+        # after construction; the no-op default keeps the hot path at one
+        # attribute check.  trace_compute gates wall-clock spans around the
+        # jitted calls — fleets disable it (their tracer runs on the virtual
+        # clock, where a jitted call is zero-width).
+        self.tracer = NULL_TRACER
+        self.trace_track = "engine"
+        self.trace_compute = True
 
         # Execution plan: pre-resolve the decode batch + prefill buckets.
         self.provider = provider
@@ -217,8 +227,14 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray([toks], jnp.int32)}
         for k, v in self.extras.items():
             batch[k] = v[None] if v.ndim == 2 else v  # (1, ..., D) stub inputs
-        logits, cache1 = self._prefill(self.params, batch,
-                                       jnp.asarray(n, jnp.int32))
+        if self.tracer.enabled and self.trace_compute:
+            with self.tracer.span("prefill", self.trace_track,
+                                  uid=req.uid, true_len=n, bucket=pad):
+                logits, cache1 = self._prefill(self.params, batch,
+                                               jnp.asarray(n, jnp.int32))
+        else:
+            logits, cache1 = self._prefill(self.params, batch,
+                                           jnp.asarray(n, jnp.int32))
         tok = int(jnp.argmax(logits[0]))
         req.generated.append(tok)
         if max_new_tokens <= 0 or (eos_id is not None and tok == eos_id) or \
@@ -248,6 +264,10 @@ class ServingEngine:
         self.provider.plan = self.plan
         self.replans += 1
         self._make_fns()
+        if self.tracer.enabled:
+            self.tracer.event("replan", self.trace_track,
+                              generation=self.plan.generation,
+                              replans=self.replans)
 
     def refresh_plan(self) -> bool:
         """Adopt any newer published schedule generation *now* — the same
@@ -270,7 +290,14 @@ class ServingEngine:
         toks = np.zeros(self.slots, np.int32)
         for slot, req in self.active.items():
             toks[slot] = req.generated[-1]
-        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(toks))
+        if self.tracer.enabled and self.trace_compute:
+            with self.tracer.span("decode_step", self.trace_track,
+                                  active=len(self.active)):
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  jnp.asarray(toks))
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks))
         self.last_logits = logits
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         finished = []

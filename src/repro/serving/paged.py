@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.resolution import ExecutionPlan, plan_serving_paged
 from repro.models.build import Model
+from repro.obs import NULL_TRACER
 from repro.serving.engine import Request, SlotsFull
 from repro.serving.pages import PagesExhausted, PageTable
 
@@ -134,6 +135,12 @@ class PagedServingEngine:
         self.defrags = 0                     # pool compactions actually applied
         self.prefill_true_tokens = 0
         self.prefill_padded_tokens = 0       # == true: chunked prefill pads nothing
+
+        # Observability (same contract as the slot engine: the owner
+        # rebinds, the default is a one-attribute-check no-op).
+        self.tracer = NULL_TRACER
+        self.trace_track = "engine"
+        self.trace_compute = True
 
         # ---- execution plan ------------------------------------------------
         self.provider = provider
@@ -436,6 +443,10 @@ class PagedServingEngine:
         self.provider.plan = self.plan
         self.replans += 1
         self._make_fns()
+        if self.tracer.enabled:
+            self.tracer.event("replan", self.trace_track,
+                              generation=self.plan.generation,
+                              replans=self.replans)
 
     def refresh_plan(self) -> bool:
         before = self.replans
@@ -496,6 +507,8 @@ class PagedServingEngine:
             pm = pm.at[dst].set(pm[src])
             self.leaves[i] = jnp.moveaxis(pm, 0, pa)
         self.defrags += 1
+        if self.tracer.enabled:
+            self.tracer.event("defrag", self.trace_track, moves=len(moves))
         return len(moves)
 
     # ------------------------------------------------------------------
@@ -521,6 +534,9 @@ class PagedServingEngine:
             self._ptoks[uid] = list(req.prompt)
         self.waiting.appendleft(req)
         self.preemptions += 1
+        if self.tracer.enabled:
+            self.tracer.event("preempt", self.trace_track, uid=uid,
+                              generated=len(req.generated))
 
     def _release(self, req: Request) -> None:
         uid = req.uid
@@ -553,6 +569,13 @@ class PagedServingEngine:
             self.plan_history.append((self._steps, self.plan.generation))
 
         acts = self._schedule()
+        if self.tracer.enabled:
+            self.tracer.event(
+                "schedule", self.trace_track, step=self._steps,
+                admits=len(acts["admits"]), chunks=len(acts["chunks"]),
+                decode_lanes=len(acts["decode_uids"]),
+                preempts=len(acts["preempts"]) + len(acts["stall_preempts"]),
+                waiting=len(self.waiting))
         finished: list[Request] = []
 
         for req, lane in acts["admits"]:
@@ -571,10 +594,19 @@ class PagedServingEngine:
             toks = self._ptoks[uid][off:off + c]
             idx_lane = jnp.asarray(self.table.flat_rows(uid, self.max_ctx))
             self._traced_chunk_lens.add(c)
-            logits, self.leaves = self._chunk(
-                self.params, self.leaves,
-                jnp.asarray([toks], jnp.int32), jnp.asarray(off, jnp.int32),
-                jnp.asarray(lane, jnp.int32), idx_lane)
+            if self.tracer.enabled and self.trace_compute:
+                with self.tracer.span("chunk", self.trace_track, uid=uid,
+                                      len=c, final=final):
+                    logits, self.leaves = self._chunk(
+                        self.params, self.leaves,
+                        jnp.asarray([toks], jnp.int32),
+                        jnp.asarray(off, jnp.int32),
+                        jnp.asarray(lane, jnp.int32), idx_lane)
+            else:
+                logits, self.leaves = self._chunk(
+                    self.params, self.leaves,
+                    jnp.asarray([toks], jnp.int32), jnp.asarray(off, jnp.int32),
+                    jnp.asarray(lane, jnp.int32), idx_lane)
             self._off[uid] = off + c
             self._ctx[uid] = off + c
             self.prefill_true_tokens += c
@@ -617,9 +649,17 @@ class PagedServingEngine:
                               + ctx % self.page_size)
                 active[lane] = True
                 lanes_decoding.append((lane, req))
-            logits, self.leaves = self._decode(
-                self.params, self.leaves, jnp.asarray(toks),
-                jnp.asarray(idx), jnp.asarray(rows), jnp.asarray(active))
+            if self.tracer.enabled and self.trace_compute:
+                with self.tracer.span("decode", self.trace_track,
+                                      lanes=len(lanes_decoding)):
+                    logits, self.leaves = self._decode(
+                        self.params, self.leaves, jnp.asarray(toks),
+                        jnp.asarray(idx), jnp.asarray(rows),
+                        jnp.asarray(active))
+            else:
+                logits, self.leaves = self._decode(
+                    self.params, self.leaves, jnp.asarray(toks),
+                    jnp.asarray(idx), jnp.asarray(rows), jnp.asarray(active))
             self.last_logits = logits
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for lane, req in lanes_decoding:

@@ -1,0 +1,350 @@
+"""Observability layer: tracer invariants, metrics registry, exporters,
+trace reports, and the no-perturbation guarantee for instrumented serving."""
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.fleet import Autoscaler, BurstyTraffic, ServingFleet, \
+    TrafficGenerator
+from repro.fleet.metrics import FleetMetrics
+from repro.models import build_model
+from repro.obs import (
+    NULL_TRACER,
+    CounterGroup,
+    MetricsRegistry,
+    Tracer,
+    percentile,
+)
+from repro.obs import report as obs_report
+from repro.obs.export import (
+    chrome_trace,
+    load_records,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.service import ScheduleRegistry
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counter_gauge_histogram():
+    m = MetricsRegistry()
+    c = m.counter("fleet.requests")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    g = m.gauge("fleet.queue_depth")
+    g.sample(2, 0.5)
+    g.sample(5, 1.5)
+    assert g.value == 5
+    assert g.values(0.0, 1.0) == [2.0]       # [t0, t1) windowing
+    h = m.histogram("fleet.latency_s")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.count == 4 and h.mean == 2.5
+    assert h.percentile(50) == percentile([1.0, 2.0, 3.0, 4.0], 50)
+    out = m.to_json()
+    assert out["fleet.requests"]["kind"] == "counter"
+    assert out["fleet.latency_s"]["value"]["count"] == 4
+    # one name, one kind — a re-get with another kind is a bug, not a merge
+    with pytest.raises(TypeError):
+        m.gauge("fleet.requests")
+
+
+def test_gauge_sample_requires_timestamp():
+    """Unstamped gauge samples cannot be windowed — they are rejected."""
+    m = MetricsRegistry()
+    with pytest.raises(TypeError):
+        m.gauge("g").sample(1.0, None)
+    fm = FleetMetrics()
+    with pytest.raises(TypeError):
+        fm.sample_queue(3)          # the old now=0.0 default is gone
+    fm.sample_queue(3, 1.25)
+    assert fm.queue_samples == [(1.25, 3.0)]
+
+
+def test_counter_group_is_dict_compatible():
+    """CounterGroup is the migration path for the legacy stats dicts."""
+    m = MetricsRegistry()
+    g = CounterGroup(m, "tuning.tpu", ["lookups", "exact_hits"])
+    g["lookups"] += 2
+    g.inc("exact_hits")
+    assert g["lookups"] == 2 and "exact_hits" in g
+    assert dict(g) == {"lookups": 2, "exact_hits": 1}
+    # the registry holds the same numbers under the namespaced names
+    assert m.counter("tuning.tpu.lookups").value == 2
+
+
+def test_percentile_is_shared_single_implementation():
+    import benchmarks.common as bc
+    import repro.fleet.metrics as fm
+    assert fm.percentile is percentile
+    assert bc.percentile is percentile
+    assert percentile([], 95) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Tracer invariants
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_timestamp_invariants():
+    t = {"v": 0.0}
+    tr = Tracer(clock=lambda: t["v"])
+    with tr.span("outer", "eng", uid=1) as outer:
+        t["v"] = 1.0
+        with tr.span("inner", "eng") as inner:
+            t["v"] = 2.0
+        t["v"] = 3.0
+    o, i = tr.spans[outer.index], tr.spans[inner.index]
+    assert o.parent is None and i.parent == outer.index
+    assert (o.t0, o.t1) == (0.0, 3.0)
+    assert (i.t0, i.t1) == (1.0, 2.0)
+    assert o.t0 <= i.t0 and i.t1 <= o.t1      # children nest
+    assert o.attrs == {"uid": 1}
+    with pytest.raises(ValueError):
+        tr.add_span("bad", "eng", 2.0, 1.0)   # time cannot run backwards
+
+
+def test_tracks_keep_registration_order():
+    tr = Tracer(clock=lambda: 0.0)
+    for name in ("replica-0", "router", "replica-0", "autoscaler"):
+        tr.track(name)
+    assert tr.tracks() == ["replica-0", "router", "autoscaler"]
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.add_span("x", "t", 0.0, 1.0) == -1
+    NULL_TRACER.event("x", "t")
+    with NULL_TRACER.span("x", "t"):
+        pass
+    assert NULL_TRACER.spans == [] and NULL_TRACER.events == []
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+
+def _sample_tracer() -> Tracer:
+    tr = Tracer(clock=lambda: 0.0)
+    p = tr.add_span("step", "replica-0", 0.0, 3.0, n=2)
+    tr.add_span("chunk", "replica-0", 0.0, 2.0, parent=p, len=8)
+    tr.add_async_span("request", "replica-0", 0.5, 2.5, "request", "7",
+                      uid=7, latency_s=2.0)
+    tr.event("shed", "router", t=1.0, uid=9, reason="queue_full")
+    return tr
+
+
+def test_chrome_trace_shape_and_roundtrip(tmp_path):
+    tr = _sample_tracer()
+    doc = chrome_trace(tr)
+    ev = doc["traceEvents"]
+    names = {r["args"]["name"] for r in ev
+             if r["ph"] == "M" and r["name"] == "thread_name"}
+    assert {"replica-0", "router"} <= names
+    ts = [r["ts"] for r in ev if "ts" in r]
+    assert ts == sorted(ts)                   # monotone export order
+    xs = [r for r in ev if r["ph"] == "X"]
+    assert {r["name"] for r in xs} == {"step", "chunk"}
+    assert any(r["ph"] == "b" for r in ev) and any(r["ph"] == "e" for r in ev)
+
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, tr)
+    recs = load_records(path)
+    spans = [r for r in recs if r["kind"] == "span"]
+    req = next(r for r in spans if r.get("cat") == "request")
+    assert req["t0"] == pytest.approx(0.5) and req["t1"] == pytest.approx(2.5)
+    assert req["attrs"]["uid"] == 7
+    evs = [r for r in recs if r["kind"] == "event"]
+    assert evs[0]["name"] == "shed" and evs[0]["attrs"]["reason"] == "queue_full"
+
+
+def test_jsonl_roundtrip_matches_chrome(tmp_path):
+    tr = _sample_tracer()
+    jl = str(tmp_path / "trace.jsonl")
+    ch = str(tmp_path / "trace.json")
+    write_jsonl(jl, tr)
+    write_chrome_trace(ch, tr)
+    a = sorted(load_records(jl), key=lambda r: json.dumps(r, sort_keys=True))
+    b = sorted(load_records(ch), key=lambda r: json.dumps(r, sort_keys=True))
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        assert ra["kind"] == rb["kind"] and ra["name"] == rb["name"]
+        assert ra["attrs"] == rb["attrs"]
+
+
+# ---------------------------------------------------------------------------
+# Trace report on a golden fixture
+# ---------------------------------------------------------------------------
+
+
+def _golden_tracer() -> Tracer:
+    """Two served requests + one shed, two tuning jobs, a scale decision."""
+    tr = Tracer(clock=lambda: 0.0)
+    for uid, (arr, adm, pd, fin) in {
+            "1": (0.0, 1.0, 2.0, 6.0),
+            "2": (1.0, 1.5, 3.0, 9.0)}.items():
+        tr.add_async_span("request", "replica-0", arr, fin, "request", uid,
+                          uid=int(uid))
+        tr.add_async_span("queue", "replica-0", arr, adm, "request", uid)
+        tr.add_async_span("prefill", "replica-0", adm, pd, "request", uid)
+        tr.add_async_span("decode", "replica-0", pd, fin, "request", uid)
+    tr.event("shed", "router", t=2.0, uid=3, reason="queue_full")
+    for t, tier in ((0.5, "default"), (4.0, "default"), (8.0, "exact")):
+        tr.event("lookup", "tuning/tpu-v5e", t=t, key="k", tier=tier,
+                 generation=0)
+    tr.add_async_span("tune", "tuning/tpu-v5e", 2.0, 5.0, "tune", "k",
+                      key="k", search_s=3.0)
+    tr.event("scale_decision", "autoscaler", t=4.0, action="up",
+             reason="queue", replicas=1)
+    tr.event("join", "autoscaler", t=4.0, replica=1, target="tpu-v5e")
+    return tr
+
+
+def test_trace_report_golden_numbers(tmp_path):
+    path = str(tmp_path / "golden.jsonl")
+    write_jsonl(path, _golden_tracer())
+    s = obs_report.summarize(load_records(path), windows=2)
+
+    lat = s["latency"]
+    assert lat["requests"] == 2 and lat["shed"] == 1
+    # request 1: latency 6, queue 1, prefill 1, decode 4
+    # request 2: latency 8, queue 0.5, prefill 1.5, decode 6
+    assert lat["latency_s"]["mean"] == pytest.approx(7.0)
+    assert lat["queue_s"]["mean"] == pytest.approx(0.75)
+    assert lat["ttft_s"]["mean"] == pytest.approx((2.0 + 2.0) / 2)
+    assert lat["decode_s"]["mean"] == pytest.approx(5.0)
+    assert lat["latency_s"]["p95"] == percentile([6.0, 8.0], 95)
+
+    shares = s["tier_shares"]
+    assert len(shares) == 2
+    assert shares[0]["shares"] == {"default": 1.0}      # t in [0.5, 4.25)
+    assert shares[1]["shares"] == {"exact": 1.0}        # the late lookup
+
+    jobs = s["tuning_jobs"]
+    assert len(jobs) == 1
+    assert jobs[0]["key"] == "k" and jobs[0]["duration_s"] == pytest.approx(3.0)
+
+    names = [e["name"] for e in s["scale_timeline"]]
+    assert names == ["scale_decision", "join"]
+
+
+def test_trace_report_cli_formats(tmp_path, capsys):
+    from repro.launch import trace_report
+
+    path = str(tmp_path / "golden.jsonl")
+    write_jsonl(path, _golden_tracer())
+    out = trace_report.main([path])
+    text = capsys.readouterr().out
+    assert "latency breakdown" in text and "scale timeline" in text
+    assert out["latency"]["requests"] == 2
+    out2 = trace_report.main([path, "--json"])
+    assert json.loads(capsys.readouterr().out) is not None
+    assert out2["latency"] == out["latency"]
+
+
+# ---------------------------------------------------------------------------
+# Instrumented serving (real fleet)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = reduced(get_arch("minitron-4b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _serve(cfg, model, params, tracer, registry=None, **kw):
+    fleet = ServingFleet(cfg, model, params, replicas=2, slots=2, max_len=32,
+                         registry=registry, policy="least_loaded",
+                         queue_cap=8, tracer=tracer, **kw)
+    gen = TrafficGenerator(seed=3, vocab_size=cfg.vocab_size,
+                           arrival_rate=1.2, tick_s=fleet.tick_s,
+                           short_lens=(3, 6), long_lens=(8, 12),
+                           new_tokens=(2, 4), prompt_cap=12)
+    summary = fleet.serve(gen.trace(12))
+    fleet.close()
+    return fleet, summary
+
+
+def test_disabled_tracer_serving_output_is_byte_identical(small_lm):
+    """The no-op default must not perturb serving at all: the summary JSON
+    of an untraced run and a traced run are byte-identical."""
+    cfg, model, params = small_lm
+    _, off = _serve(cfg, model, params, None)
+    _, on = _serve(cfg, model, params, Tracer())
+    assert json.dumps(off, sort_keys=True) == json.dumps(on, sort_keys=True)
+
+
+def test_fleet_trace_spans_nest_and_stay_monotone(small_lm, tmp_path):
+    cfg, model, params = small_lm
+    tracer = Tracer()
+    fleet, summary = _serve(cfg, model, params, tracer,
+                            registry=ScheduleRegistry(str(tmp_path / "reg")))
+    eps = 1e-9
+    by_track: dict = {}
+    for s in tracer.spans:
+        assert s.t1 >= s.t0 - eps
+        if s.cat is None and s.parent is None:
+            by_track.setdefault(s.track, []).append(s)
+        if s.parent is not None:                # children nest in the parent
+            p = tracer.spans[s.parent]
+            assert p.t0 - eps <= s.t0 and s.t1 <= p.t1 + eps
+    for track, spans in by_track.items():       # replicas are serial
+        spans.sort(key=lambda s: s.t0)
+        for a, b in zip(spans, spans[1:]):
+            assert b.t0 >= a.t1 - eps, f"overlap on {track}"
+
+    # the trace reproduces the fleet's percentiles exactly
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, tracer)
+    rep = obs_report.summarize(load_records(path))
+    assert rep["latency"]["requests"] == summary["completed"]
+    for q in ("p50", "p95", "p99"):
+        assert rep["latency"]["latency_s"][q] == \
+            pytest.approx(summary["latency_s"][q], rel=1e-9)
+
+
+def test_autoscaled_run_traces_scale_decisions(small_lm, tmp_path):
+    """Acceptance path: an autoscaled bursty run leaves the scale-up
+    decision and the warm-join visible in the trace."""
+    cfg, model, params = small_lm
+    tracer = Tracer()
+    fleet = ServingFleet(cfg, model, params, replicas=1, slots=2, max_len=32,
+                         registry=ScheduleRegistry(str(tmp_path / "reg")),
+                         policy="least_loaded", queue_cap=8, tracer=tracer)
+    fleet.attach_autoscaler(Autoscaler(
+        min_replicas=1, max_replicas=2, window_s=8.0 * fleet.tick_s,
+        cooldown_s=8.0 * fleet.tick_s, up_windows=1, down_windows=2,
+        queue_high=1.0, util_low=0.6, queue_low=0.75))
+    gen = BurstyTraffic(seed=2, vocab_size=cfg.vocab_size, arrival_rate=0.3,
+                        burst_rate=3.0, burst_every_ticks=40.0,
+                        burst_len_ticks=10.0, offset_ticks=4.0,
+                        tick_s=fleet.tick_s, short_lens=(3, 6),
+                        long_lens=(8, 12), new_tokens=(2, 4), prompt_cap=12)
+    summary = fleet.serve(gen.trace(30))
+    fleet.close()
+    assert any(e["action"] == "join" for e in summary["scale_events"])
+
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, tracer)
+    timeline = obs_report.scale_timeline(load_records(path))
+    names = [e["name"] for e in timeline]
+    assert "scale_decision" in names and "join" in names
+    ups = [e for e in timeline
+           if e["name"] == "scale_decision" and e["action"] == "up"]
+    assert len(ups) >= 1
+    # autoscaler counters live in the fleet-wide registry after bind_obs
+    assert fleet.obs.counter("autoscaler.scale_ups").value >= 1
+    # decisions and joins appear in virtual-time order
+    ts = [e["t"] for e in timeline]
+    assert ts == sorted(ts)
