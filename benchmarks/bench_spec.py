@@ -1,0 +1,273 @@
+"""Speculative decoding as a transfer-tuned workload: three claims.
+
+A draft-then-verify serving path only pays off when (a) the batched verify
+step really costs about one decode step (memory-bound regime), (b) greedy
+acceptance keeps the committed stream bit-exact, and (c) the new ``verify``
+workload class does not reopen a cold tuning bill.  This benchmark checks
+all three against the plain paged engine:
+
+1. **throughput** — two single-replica paged fleets serve the *same*
+   seeded decode-heavy trace (short prompts, long generations); the
+   speculating fleet (truncated self-draft, ``keep_layers=1``, lightly
+   damped deep layers so acceptance is high but not trivially 1.0) must
+   reach >= 1.5x the plain fleet's token throughput in virtual seconds;
+2. **equivalence** — standalone engines, same prompts: the speculative
+   engine's committed tokens must match plain greedy decode exactly
+   (0 mismatches), with bursts genuinely mixing accepts and rejects;
+3. **transfer-seeded tuning** — the verify cell shares every non-head
+   kernel workload with chunk prefill, so transfer-tuning it from the
+   chunk/decode donors a plain serving fleet has already tuned must reach
+   the same schedule quality in fewer virtual search seconds than cold
+   auto-scheduling the verify cells from scratch.
+
+The target is the reduced minitron-4b deepened to 8 layers: speculation's
+economics need a real draft/target depth gap (a 2-layer target drafts
+almost nothing), and the deeper stack keeps decode/verify memory-bound so
+the analytical cost model prices a burst at ``(k+1) * draft + verify``
+against ``E[committed] * decode``.  All times are virtual (cost-model /
+measurement-harness) seconds; see DESIGN.md §11.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.autoscheduler import tune_model, tune_model_into_db
+from repro.core.database import ScheduleDB
+from repro.core.extract import extract_kernels
+from repro.core.resolution import spec_verify_uses
+from repro.core.transfer import transfer_tune
+from repro.fleet import ServingFleet, TrafficGenerator
+from repro.models import build_model
+from repro.serving import PagedServingEngine, make_self_draft
+from repro.service import ScheduleRegistry
+
+#: ``requests`` sizes the served trace; ``trials`` is the cold tuning
+#: budget the transfer path is raced against in gate 3.
+PRESETS = {
+    "smoke": {"requests": 24, "trials": 256},
+    "full": {"requests": 64, "trials": 768},
+}
+
+ARCH = "minitron-4b"
+N_LAYERS = 8              # deepened: draft/target gap is the whole economics
+KEEP_LAYERS = 1           # truncated self-draft depth
+DAMP = 0.01               # deep-layer damping: high-but-not-1.0 acceptance
+SPEC_K = 4                # draft tokens per burst
+REPLICAS = 1
+SLOTS = 4
+MAX_LEN = 96
+DECODE_BATCH = 8
+PAGE_SIZE = 4
+CHUNK = 16                # == prompt cap: one exact chunk per prompt
+ADMIT_CAP = 16
+QUEUE_CAP = 128
+SEED = 3
+#: Donor-pool truncation for the transfer race — the same strongest-first
+#: cap the tuning service applies to its probe candidates; an uncapped
+#: pool spends more virtual seconds measuring weak donors than the gap to
+#: cold tuning is worth.
+MAX_CANDIDATES = 6
+#: Decode-heavy and bursty: short prompts, long generations, arrivals fast
+#: enough that both fleets run work-bound (the makespan measures service
+#: rate, not the arrival process).
+TRAFFIC = {"arrival_rate": 4.0, "short_lens": (3, 8), "long_lens": (8, 12),
+           "long_frac": 0.1, "prompt_cap": 16, "new_tokens": (24, 40),
+           "long_new_tokens": (40, 56),
+           "class_mix": {"chat": 0.7, "bulk": 0.3}}
+
+
+def _trace(cfg, tick_s: float, n: int):
+    """Fresh generator, fixed seed: both fleets see the identical stream."""
+    gen = TrafficGenerator(seed=SEED, vocab_size=cfg.vocab_size,
+                           tick_s=tick_s, **TRAFFIC)
+    return gen.trace(n)
+
+
+def _run_fleet(scratch: str, n: int, tick_s: float, *, model, params, cfg,
+               draft=None, draft_params=None) -> dict:
+    kw = {}
+    if draft is not None:
+        kw = {"speculative": True, "draft_model": draft,
+              "draft_params": draft_params, "spec_k": SPEC_K}
+    fleet = ServingFleet(cfg, model, params, replicas=REPLICAS, slots=SLOTS,
+                         max_len=MAX_LEN, engine="paged",
+                         decode_batch=DECODE_BATCH, page_size=PAGE_SIZE,
+                         pool_pages=DECODE_BATCH * MAX_LEN // PAGE_SIZE + 1,
+                         chunk=CHUNK, admit_cap=ADMIT_CAP,
+                         registry=ScheduleRegistry(
+                             tempfile.mkdtemp(dir=scratch)),
+                         policy="plan_aware", queue_cap=QUEUE_CAP, **kw)
+    try:
+        return fleet.serve(_trace(cfg, tick_s, n))
+    finally:
+        fleet.close()
+
+
+def _equivalence(model, params, draft, draft_params) -> dict:
+    """Committed tokens must equal plain greedy decode, bit for bit."""
+    rng = np.random.default_rng(11)
+    prompts = [[int(t) for t in rng.integers(1, model.cfg.vocab_size, size=n)]
+               for n in (3, 11, 7, 14, 5, 9)]
+    mnt = 16
+
+    def run(spec: bool):
+        kw = {"draft_model": draft, "draft_params": draft_params,
+              "spec_k": SPEC_K} if spec else {}
+        eng = PagedServingEngine(model, params, decode_batch=len(prompts),
+                                 max_ctx=MAX_LEN, page_size=PAGE_SIZE,
+                                 chunk=CHUNK, **kw)
+        reqs = [eng.add_request(p, max_new_tokens=mnt) for p in prompts]
+        eng.run_to_completion()
+        return reqs, eng
+
+    plain_reqs, _ = run(spec=False)
+    spec_reqs, eng = run(spec=True)
+    mismatches = sum(a.generated != b.generated
+                     for a, b in zip(plain_reqs, spec_reqs))
+    return {"requests": len(prompts),
+            "token_mismatches": int(mismatches),
+            "bursts": eng.spec_bursts,
+            "proposed": eng.spec_proposed,
+            "accepted": eng.spec_accepted,
+            "committed": eng.spec_committed,
+            "acceptance": eng.spec_accepted / max(eng.spec_proposed, 1)}
+
+
+def _transfer_race(cfg, trials: int) -> dict:
+    """Transfer-seed the verify cells from chunk/decode donors vs cold tune.
+
+    The donor pool is exactly what a *plain* paged serving fleet has
+    already tuned — its decode and chunk-prefill cells — so the race
+    models flipping ``--speculative`` on over a warm registry.
+    """
+    verify = spec_verify_uses(cfg, decode_batch=DECODE_BATCH,
+                              max_ctx=MAX_LEN, spec_k=SPEC_K)
+    donors = list(extract_kernels(
+        cfg, ShapeConfig("paged_decode", MAX_LEN, DECODE_BATCH, "decode"),
+        dp=1, tp=1))
+    donors += list(extract_kernels(
+        cfg, ShapeConfig(f"paged_chunk_{CHUNK}", CHUNK, 1, "chunk_prefill",
+                         ctx_len=MAX_LEN), dp=1, tp=1))
+    db = ScheduleDB()
+    tune_model_into_db(db, donors, model_id=ARCH, total_trials=trials,
+                       seed=common.SEED)
+
+    res = transfer_tune(verify, db, model_id=f"{ARCH}-spec-verify",
+                        mode="adaptive",
+                        max_candidates_per_kernel=MAX_CANDIDATES)
+    cold = tune_model(verify, model_id=f"{ARCH}-spec-verify-cold",
+                      total_trials=trials, seed=common.SEED)
+    cold_to_match = None
+    for p in cold.trace:
+        if p.best_seconds <= res.tuned_seconds:
+            cold_to_match = p.search_time_s
+            break
+    return {"transfer_search_time_s": res.search_time_s,
+            "transfer_tuned_seconds": res.tuned_seconds,
+            "transfer_speedup": res.speedup,
+            "transfer_coverage": res.coverage(),
+            "exact_hits": sum(k.exact_hit for k in res.kernels),
+            "kernels": len(res.kernels),
+            "cold_search_time_s": cold.search_time_s,
+            "cold_tuned_seconds": cold.tuned_seconds,
+            "cold_time_to_match_s": cold_to_match}
+
+
+def run(preset: str = "smoke") -> list[tuple]:
+    p = PRESETS[preset]
+    cfg = dataclasses.replace(reduced(get_arch(ARCH)), n_layers=N_LAYERS)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg, dparams, params = make_self_draft(cfg, params,
+                                            keep_layers=KEEP_LAYERS,
+                                            damp=DAMP)
+    draft = build_model(dcfg)
+
+    scratch = tempfile.mkdtemp(prefix="spec-bench-")
+    try:
+        probe = ServingFleet(cfg, model, params, replicas=REPLICAS,
+                             slots=SLOTS, max_len=MAX_LEN, engine="paged",
+                             decode_batch=DECODE_BATCH, page_size=PAGE_SIZE,
+                             chunk=CHUNK,
+                             registry=ScheduleRegistry(
+                                 tempfile.mkdtemp(dir=scratch)))
+        tick_s = probe.tick_s
+        probe.close()
+
+        plain = _run_fleet(scratch, p["requests"], tick_s,
+                           model=model, params=params, cfg=cfg)
+        spec = _run_fleet(scratch, p["requests"], tick_s,
+                          model=model, params=params, cfg=cfg,
+                          draft=draft, draft_params=dparams)
+        equiv = _equivalence(model, params, draft, dparams)
+        race = _transfer_race(cfg, p["trials"])
+
+        ratio = (spec["throughput_tok_per_s"] /
+                 max(plain["throughput_tok_per_s"], 1e-12))
+        sc = spec["speculative"]["counters"]
+        burst_tokens = sc["committed"] / max(sc["bursts"], 1)
+        alpha = sc["accepted"] / max(sc["proposed"], 1)
+        ttm = race["cold_time_to_match_s"]
+        race_pass = ttm is None or race["transfer_search_time_s"] < ttm
+        race_note = ("cold never matched within budget" if ttm is None else
+                     f"cold_to_match={ttm:.1f}s "
+                     f"(x{ttm / max(race['transfer_search_time_s'], 1e-12):.1f})")
+
+        rows = [
+            ("spec/plain_throughput_tok_per_s",
+             round(plain["throughput_tok_per_s"], 1),
+             f"p95_ticks={plain['latency_ticks']['p95']:.1f}"),
+            ("spec/spec_throughput_tok_per_s",
+             round(spec["throughput_tok_per_s"], 1),
+             f"x{ratio:.2f} vs plain (>=1.5x): "
+             f"{'PASS' if ratio >= 1.5 else 'FAIL'} "
+             f"alpha={alpha:.2f} committed/burst={burst_tokens:.2f}"),
+            ("spec/token_mismatches", equiv["token_mismatches"],
+             f"committed stream vs plain greedy decode "
+             f"(acceptance={equiv['acceptance']:.2f}, "
+             f"{equiv['bursts']} bursts): "
+             f"{'PASS' if equiv['token_mismatches'] == 0 else 'FAIL'}"),
+            ("spec/transfer_search_time_s",
+             round(race["transfer_search_time_s"], 2),
+             f"vs cold verify tuning, {race_note}: "
+             f"{'PASS' if race_pass else 'FAIL'} "
+             f"exact_hits={race['exact_hits']}/{race['kernels']}"),
+        ]
+        common.save_result("spec", {
+            "preset": preset,
+            "arch": ARCH,
+            "config": {"n_layers": N_LAYERS, "keep_layers": KEEP_LAYERS,
+                       "damp": DAMP, "spec_k": SPEC_K,
+                       "replicas": REPLICAS, "max_len": MAX_LEN,
+                       "decode_batch": DECODE_BATCH, "page_size": PAGE_SIZE,
+                       "chunk": CHUNK, "admit_cap": ADMIT_CAP,
+                       "queue_cap": QUEUE_CAP, "seed": SEED,
+                       "requests": p["requests"], "trials": p["trials"],
+                       **{k: list(v) if isinstance(v, tuple) else v
+                          for k, v in TRAFFIC.items()}},
+            "plain": plain,
+            "spec": spec,
+            "throughput_ratio": ratio,
+            "equivalence": equiv,
+            "transfer_race": race,
+        })
+        return rows
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    args = ap.parse_args()
+    common.emit(run(args.preset),
+                "Speculative draft-then-verify vs plain paged decode")

@@ -29,6 +29,7 @@ def main() -> None:
         bench_runner_cache,
         bench_seqlen,
         bench_service,
+        bench_spec,
         bench_targets,
     )
 
@@ -50,6 +51,7 @@ def main() -> None:
         ("Paged continuous batching vs fixed slots", bench_paged),
         ("Elastic autoscaling fleet vs fixed sizes", bench_autoscale),
         ("Observability overhead + trace fidelity", bench_obs),
+        ("Speculative draft-then-verify vs plain paged decode", bench_spec),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

@@ -134,9 +134,9 @@ class ShapeConfig:
     name: str
     seq_len: int
     global_batch: int
-    kind: str  # "train" | "prefill" | "decode" | "chunk_prefill"
-    # chunk_prefill only: total cache context the chunk attends into
-    # (seq_len is the chunk length itself).  0 elsewhere.
+    kind: str  # "train" | "prefill" | "decode" | "chunk_prefill" | "verify"
+    # chunk_prefill / verify only: total cache context the slice attends
+    # into (seq_len is the chunk / burst length itself).  0 elsewhere.
     ctx_len: int = 0
 
 

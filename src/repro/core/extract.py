@@ -30,8 +30,12 @@ def extract_kernels(cfg: ArchConfig, shape: ShapeConfig, *, dp: int = 1,
     dt = cfg.dtype
     decode = shape.kind == "decode"
     # chunk_prefill: seq_len tokens of one sequence attending into a cache of
-    # ctx_len positions (paged serving's interleaved prefill slices)
-    chunk = shape.kind == "chunk_prefill"
+    # ctx_len positions (paged serving's interleaved prefill slices).
+    # verify: the speculative k+1-position verify burst — same prefill-like
+    # attention geometry (short Q against a long cached KV), which is exactly
+    # why chunk-prefill donors transfer onto it; unlike chunk_prefill the lm
+    # head projects every position (acceptance needs all k+1 distributions).
+    chunk = shape.kind in ("chunk_prefill", "verify")
     ctx = shape.ctx_len if chunk and shape.ctx_len else shape.seq_len
     b_local = _div(shape.global_batch, dp)
     s = shape.seq_len
@@ -125,8 +129,9 @@ def extract_kernels(cfg: ArchConfig, shape: ShapeConfig, *, dp: int = 1,
 
     # ---- lm head ------------------------------------------------------------------------
     head_cls = "matmul_lmhead_softcap" if cfg.final_softcap > 0 else "matmul_lmhead"
-    # decode and chunk_prefill project logits for the last position only
-    head_tokens = b_local if (decode or chunk) else tokens
+    # decode and chunk_prefill project logits for the last position only;
+    # verify projects all k+1 positions (acceptance compares each of them)
+    head_tokens = b_local if (decode or shape.kind == "chunk_prefill") else tokens
     add(head_cls, 1, "lm_head", M=head_tokens, N=_div(cfg.vocab_size, tp), K=d)
 
     return dedup_uses(uses)

@@ -445,8 +445,9 @@ def plan_serving(model_cfg, pipeline: ResolutionPipeline, *, slots: int,
 
 def plan_serving_paged(model_cfg, pipeline: ResolutionPipeline, *,
                        decode_batch: int, page_size: int, pages_per_seq: int,
-                       chunk_lens: Sequence[int] = (),
-                       label: str | None = None) -> ExecutionPlan:
+                       chunk_lens: Sequence[int] = (), spec_k: int = 0,
+                       draft_cfg=None, label: str | None = None
+                       ) -> ExecutionPlan:
     """Pre-resolve a *paged* serving engine's kernel set.
 
     The paged engine's workload classes key on (decode-batch-size,
@@ -455,6 +456,12 @@ def plan_serving_paged(model_cfg, pipeline: ResolutionPipeline, *,
     prefill is batch-1 ``chunk_prefill`` cells — one per chunk length —
     attending into that same context.  The registry/TuningService stack
     learns these shapes exactly like any other cell.
+
+    ``spec_k > 0`` adds the speculative cells: the batched ``verify`` step
+    (k+1 positions per lane, all ``decode_batch`` lanes) for the target
+    model, and — when ``draft_cfg`` is given — the draft model's decode and
+    chunk-prefill cells.  The verify cell shares the chunk-prefill kernel
+    classes, so transfer-tuning seeds it from the chunk donors.
     """
     from repro.configs.base import ShapeConfig  # lazy: layering
     from repro.core.extract import extract_kernels
@@ -469,4 +476,31 @@ def plan_serving_paged(model_cfg, pipeline: ResolutionPipeline, *,
         uses.extend(extract_kernels(
             model_cfg, ShapeConfig(f"paged_chunk_{c}", c, 1, "chunk_prefill",
                                    ctx_len=max_ctx), dp=1, tp=1))
+    if spec_k > 0:
+        uses.extend(spec_verify_uses(model_cfg, decode_batch=decode_batch,
+                                     max_ctx=max_ctx, spec_k=spec_k))
+        if draft_cfg is not None:
+            uses.extend(extract_kernels(
+                draft_cfg, ShapeConfig("paged_decode", max_ctx, decode_batch,
+                                       "decode"), dp=1, tp=1))
+            for c in sorted(set(int(c) for c in chunk_lens)):
+                uses.extend(extract_kernels(
+                    draft_cfg, ShapeConfig(f"paged_chunk_{c}", c, 1,
+                                           "chunk_prefill", ctx_len=max_ctx),
+                    dp=1, tp=1))
     return plan_uses(uses, pipeline, label=label)
+
+
+def spec_verify_uses(model_cfg, *, decode_batch: int, max_ctx: int,
+                     spec_k: int) -> list[KernelUse]:
+    """Kernel uses of one batched speculative ``verify`` step: k+1 positions
+    per lane across all ``decode_batch`` lanes, attending into ``max_ctx``
+    cached context.  Exposed standalone so benchmarks and the tuning service
+    can tune / transfer-seed the verify workload without building a plan."""
+    from repro.configs.base import ShapeConfig  # lazy: layering
+    from repro.core.extract import extract_kernels
+
+    return list(extract_kernels(
+        model_cfg, ShapeConfig(f"spec_verify_{spec_k + 1}", spec_k + 1,
+                               decode_batch, "verify", ctx_len=max_ctx),
+        dp=1, tp=1))

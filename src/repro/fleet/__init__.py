@@ -5,11 +5,13 @@ A request front-end over N :class:`~repro.serving.ServingEngine` replicas:
     traffic.py ..... seeded request streams (Poisson, bursty, diurnal, replay)
     router.py ...... bounded admission queue + pluggable dispatch policies
     demand.py ...... decayed per-bucket arrival counts driving tuning order
+    acceptance.py .. decayed per-class speculative acceptance estimates
     metrics.py ..... latency percentiles, windowed telemetry, shed accounting
     autoscale.py ... hysteresis autoscaler over the windowed telemetry
     fleet.py ....... replicas + shared-registry propagation + the serve loop
                      + elastic lifecycle (warm-join / drain-retire)
 """
+from repro.fleet.acceptance import AcceptanceTracker
 from repro.fleet.autoscale import Autoscaler, ScaleDecision
 from repro.fleet.demand import DemandTracker
 from repro.fleet.fleet import PagedReplica, Replica, ServingFleet
@@ -37,6 +39,7 @@ from repro.fleet.traffic import (
 )
 
 __all__ = [
+    "AcceptanceTracker",
     "Autoscaler",
     "BurstyTraffic",
     "DemandTracker",

@@ -48,10 +48,11 @@ from typing import Any, Sequence
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.extract import extract_kernels
-from repro.core.resolution import Resolution
+from repro.core.resolution import Resolution, spec_verify_uses
 from repro.core.runner import AnalyticalRunner, CachedRunner
 from repro.core.schedule import ScheduleInvalid
 from repro.core.workload import KernelInstance, KernelUse
+from repro.fleet.acceptance import AcceptanceTracker
 from repro.fleet.demand import DemandTracker
 from repro.fleet.metrics import FleetMetrics
 from repro.fleet.router import TIER_SCORE, QueueFull, RequestRouter
@@ -59,6 +60,8 @@ from repro.fleet.traffic import FleetRequest
 from repro.kernels.ops import ScheduleProvider
 from repro.obs import NULL_TRACER, MetricsRegistry
 from repro.serving import PagedServingEngine, ServingEngine
+from repro.serving.speculative import expected_committed_tokens
+from repro.serving.speculative import spec_gain as _spec_gain
 from repro.targets import DEFAULT_TARGET, target_name
 
 
@@ -280,7 +283,27 @@ class PagedReplica(Replica):
     ``expected_step_s`` exposes the same estimate to deadline-aware routing
     *before* the step starts (the scheduler is pure, so preview and
     execution always agree).
+
+    When the engine speculates, the cost model grows three more cells —
+    the draft's chunked prefill (keeping the draft cache in sync), the
+    draft's batched decode (k+1 per burst), and the batched ``verify``
+    step — and the iteration cost sums exactly what ``planned_work`` says
+    will run.  The fleet installs ``acceptance`` (the per-class
+    :class:`~repro.fleet.acceptance.AcceptanceTracker`) plus the
+    acceptance gauge / committed histogram; ``complete_step`` drains the
+    engine's burst events into them.
     """
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        # Fleet-installed speculative collaborators (None: speculation off).
+        self.acceptance: AcceptanceTracker | None = None
+        self.spec_gauge = None
+        self.spec_hist = None
+        self.spec_counters = None
+        self._verify_uses: list[KernelUse] | None = None
+        self._draft_uses: list[KernelUse] | None = None
+        self._draft_chunk_uses: dict[int, list[KernelUse]] = {}
 
     def _serving_uses(self) -> list[KernelUse]:
         e = self.engine
@@ -302,10 +325,81 @@ class PagedReplica(Replica):
                                       ctx_len=self.engine.max_ctx), dp=1, tp=1)
         return uses
 
+    # -- speculative cost cells -------------------------------------------------
+    @property
+    def spec_capable(self) -> bool:
+        """Whether the wrapped engine has a draft attached (speculation on)."""
+        return bool(getattr(self.engine, "_spec", False))
+
+    def verify_cell_uses(self) -> list[KernelUse]:
+        if self._verify_uses is None:
+            e = self.engine
+            self._verify_uses = spec_verify_uses(
+                self.cfg, decode_batch=e.decode_batch, max_ctx=e.max_ctx,
+                spec_k=e.spec_k)
+        return self._verify_uses
+
+    def draft_decode_uses(self) -> list[KernelUse]:
+        if self._draft_uses is None:
+            e = self.engine
+            self._draft_uses = extract_kernels(
+                e.draft_model.cfg,
+                ShapeConfig("draft_decode", e.max_ctx, e.decode_batch,
+                            "decode"), dp=1, tp=1)
+        return self._draft_uses
+
+    def verify_cost(self) -> float:
+        """Virtual seconds of one batched verify step (all lanes, k+1 each)."""
+        return self._uses_cost(self.verify_cell_uses(), "verify")
+
+    def draft_decode_cost(self) -> float:
+        """Virtual seconds of one batched draft decode step."""
+        return self._uses_cost(self.draft_decode_uses(), "draft_decode")
+
+    def draft_chunk_cost(self, c: int) -> float:
+        uses = self._draft_chunk_uses.get(c)
+        if uses is None:
+            uses = self._draft_chunk_uses[c] = extract_kernels(
+                self.engine.draft_model.cfg,
+                ShapeConfig(f"draft_chunk_{c}", c, 1, "chunk_prefill",
+                            ctx_len=self.engine.max_ctx), dp=1, tp=1)
+        return self._uses_cost(uses, ("draft_chunk", c))
+
+    def spec_gain(self, alpha: float) -> float:
+        """Projected speculate-vs-plain throughput ratio at acceptance rate
+        ``alpha``, under this replica's *measured* (plan-derived) cell
+        costs — the admit-time decision quantity for ``speculative="auto"``."""
+        if not self.spec_capable:
+            return 1.0
+        return _spec_gain(self.engine.spec_k, alpha,
+                          draft_cost_s=self.draft_decode_cost(),
+                          verify_cost_s=self.verify_cost(),
+                          decode_cost_s=self.decode_cost())
+
+    def expected_token_s(self, request_class: str = "") -> float | None:
+        """Expected virtual seconds per *committed* token for a request of
+        ``request_class`` (None when not speculating — callers fall back to
+        per-step projections).  Auto routing takes the better of the spec
+        burst rate at the class's current acceptance estimate and plain
+        decode, which is exactly what admission will choose."""
+        if not self.spec_capable:
+            return None
+        alpha = (self.acceptance.alpha(request_class)
+                 if self.acceptance is not None else 0.7)
+        k = self.engine.spec_k
+        burst = (k + 1) * self.draft_decode_cost() + self.verify_cost()
+        spec_tok = burst / expected_committed_tokens(k, alpha)
+        return min(self.decode_cost(), spec_tok)
+
     def expected_step_s(self) -> float:
         """Virtual cost of the engine's next iteration under the plan."""
         work = self.engine.planned_work()
         cost = sum(self.prefill_cost(c) for c in work["chunk_lens"])
+        cost += sum(self.draft_chunk_cost(c)
+                    for c in work.get("draft_sync_lens", ()))
+        if work.get("spec_lanes"):
+            cost += (work["draft_steps"] * self.draft_decode_cost()
+                     + self.verify_cost())
         if work["decode"]:
             cost += self.decode_cost()
         # nothing runnable this instant (e.g. pure preemption step): charge
@@ -314,9 +408,14 @@ class PagedReplica(Replica):
 
     def admit(self, req: FleetRequest, now: float):
         """Enqueue into the engine — O(1), no clock charge, no busy flag:
-        the admitted request's first chunk runs inside the next step."""
+        the admitted request's first chunk runs inside the next step.
+
+        ``req.speculative`` carries the fleet's admit-time spec decision
+        (None defers to the engine default); the workload class rides along
+        so burst events can be attributed back to the class."""
         engine_req = self.engine.add_request(
-            req.prompt, max_new_tokens=req.max_new_tokens, eos_id=req.eos_id)
+            req.prompt, max_new_tokens=req.max_new_tokens, eos_id=req.eos_id,
+            speculative=req.speculative, request_class=req.request_class)
         req.admitted_s = now
         req.replica = self.idx
         req.exact_share_at_admit = self.prefill_exact_share(req.bucket)
@@ -337,6 +436,24 @@ class PagedReplica(Replica):
         work = self.engine.planned_work() if tracing else None
         finished = self.engine.step()
         self.busy = self.step_pending = False
+        spec_events = (self.engine.drain_spec_events()
+                       if self.spec_capable else [])
+        for ev in spec_events:
+            if self.acceptance is not None:
+                self.acceptance.record(ev["request_class"], ev["proposed"],
+                                       ev["accepted"], now)
+            if self.spec_hist is not None:
+                self.spec_hist.observe(ev["committed"])
+            if self.spec_counters is not None:
+                self.spec_counters.inc("bursts")
+                self.spec_counters.inc("proposed", ev["proposed"])
+                self.spec_counters.inc("accepted", ev["accepted"])
+                self.spec_counters.inc("committed", ev["committed"])
+        if spec_events and self.spec_gauge is not None:
+            prop = sum(e["proposed"] for e in spec_events)
+            if prop:
+                self.spec_gauge.sample(
+                    sum(e["accepted"] for e in spec_events) / prop, now)
         out = []
         for er in finished:
             fr = self._fleet_reqs.pop(er.uid)
@@ -356,6 +473,7 @@ class PagedReplica(Replica):
             parent = self.tracer.add_span(
                 "step", self.track, self._step_t0, now,
                 chunks=len(work["chunk_lens"]), decode=work["decode"],
+                spec_lanes=work.get("spec_lanes", 0),
                 active=len(active), finished=len(out))
             # Child spans re-derive the step layout from the same costs
             # start_step charged; clamp to ``now`` against float drift.
@@ -364,6 +482,25 @@ class PagedReplica(Replica):
                 t1 = min(t + self.prefill_cost(c), now)
                 self.tracer.add_span("chunk", self.track, min(t, t1), t1,
                                      parent=parent, len=c)
+                t = t1
+            for c in work.get("draft_sync_lens", ()):
+                t1 = min(t + self.draft_chunk_cost(c), now)
+                self.tracer.add_span("draft_sync", self.track, min(t, t1), t1,
+                                     parent=parent, len=c)
+                t = t1
+            if work.get("spec_lanes"):
+                t1 = min(t + work["draft_steps"] * self.draft_decode_cost(),
+                         now)
+                self.tracer.add_span("draft_burst", self.track, min(t, t1),
+                                     t1, parent=parent,
+                                     lanes=work["spec_lanes"],
+                                     steps=work["draft_steps"])
+                t = t1
+                t1 = min(t + self.verify_cost(), now)
+                self.tracer.add_span("verify", self.track, min(t, t1), t1,
+                                     parent=parent,
+                                     lanes=work["spec_lanes"],
+                                     len=work["verify_len"])
                 t = t1
             if work["decode"]:
                 t1 = max(t, min(t + self.decode_cost(), now))
@@ -382,6 +519,13 @@ class PagedReplica(Replica):
         out["preemptions"] = self.engine.preemptions
         out["defrags"] = self.engine.defrags
         out["page_utilization"] = self.engine.utilization()
+        if self.spec_capable:
+            e = self.engine
+            out["spec"] = {
+                "k": e.spec_k, "bursts": e.spec_bursts,
+                "proposed": e.spec_proposed, "accepted": e.spec_accepted,
+                "committed": e.spec_committed,
+                "alpha": e.spec_accepted / max(e.spec_proposed, 1)}
         return out
 
 
@@ -421,12 +565,28 @@ class ServingFleet:
                  drain_jobs: int = 2, drain_every: int = 4,
                  autoscaler=None, min_replicas: int = 1,
                  seed: int = 0, extras: dict | None = None,
+                 speculative: "bool | str" = False, draft_model=None,
+                 draft_params=None, spec_k: int = 4,
+                 acceptance: "AcceptanceTracker | None" = None,
                  tracer=None, metrics: MetricsRegistry | None = None):
         if engine not in ("slot", "paged"):
             raise ValueError(f"unknown engine {engine!r}: 'slot' or 'paged'")
         self.engine_kind = engine
         if replicas <= 0:
             raise ValueError("need at least one replica")
+        if speculative not in (False, True, "auto"):
+            raise ValueError("speculative must be False, True, or 'auto'")
+        if speculative:
+            if engine != "paged":
+                raise ValueError("speculative serving requires engine='paged'")
+            if draft_model is None or draft_params is None:
+                raise ValueError(
+                    "speculative serving needs draft_model and draft_params")
+            if spec_k <= 0:
+                raise ValueError("spec_k must be positive when speculating")
+        self.spec_mode = speculative
+        self.acceptance = ((acceptance if acceptance is not None
+                            else AcceptanceTracker()) if speculative else None)
         self.cfg = cfg
         self.registry = registry
         # Observability first: services and replicas constructed below bind
@@ -455,7 +615,13 @@ class ServingFleet:
                         page_size=page_size, pool_pages=pool_pages,
                         chunk=chunk, chunks_per_step=chunks_per_step,
                         admit_cap=admit_cap,
-                        defrag_threshold=defrag_threshold, extras=extras)
+                        defrag_threshold=defrag_threshold, extras=extras,
+                        draft_model=draft_model if speculative else None,
+                        draft_params=draft_params if speculative else None,
+                        spec_k=spec_k if speculative else 0)
+        self.spec_counters = (self.obs.group(
+            "spec", ["admit_spec", "admit_plain", "bursts", "proposed",
+                     "accepted", "committed"]) if speculative else None)
         self._svc_kw = dict(seed=seed, budget_s=tuning_budget_s,
                             donor_target=donor_target, donors=donors)
 
@@ -547,9 +713,17 @@ class ServingFleet:
                 chunks_per_step=mk["chunks_per_step"],
                 admit_cap=mk["admit_cap"],
                 defrag_threshold=mk["defrag_threshold"],
+                draft_model=mk["draft_model"],
+                draft_params=mk["draft_params"], spec_k=mk["spec_k"],
                 provider=provider)
             self._bind_engine_obs(eng, idx)
-            return PagedReplica(idx, self.cfg, eng, svc, target)
+            rep = PagedReplica(idx, self.cfg, eng, svc, target)
+            if self.spec_mode:
+                rep.acceptance = self.acceptance
+                rep.spec_counters = self.spec_counters
+                rep.spec_gauge = self.obs.gauge("spec.acceptance_rate")
+                rep.spec_hist = self.obs.histogram("spec.committed_per_burst")
+            return rep
         eng = ServingEngine(mk["model"], mk["params"], slots=mk["slots"],
                             max_len=mk["max_len"], extras=mk["extras"],
                             provider=provider)
@@ -761,6 +935,22 @@ class ServingFleet:
 
     def _admit(self, req: FleetRequest, idx: int) -> bool:
         replica = self.replicas[idx]
+        if self.spec_mode and getattr(replica, "spec_capable", False):
+            if self.spec_mode == "auto":
+                # Per-request economics: speculate only when the measured
+                # per-class acceptance rate projects a throughput win under
+                # this replica's plan-derived cell costs.
+                alpha = self.acceptance.alpha(req.request_class)
+                req.speculative = replica.spec_gain(alpha) > 1.0
+            else:
+                req.speculative = True
+            self.spec_counters.inc(
+                "admit_spec" if req.speculative else "admit_plain")
+            if self.tracer.enabled:
+                self.tracer.event(
+                    "spec_route", "router", uid=req.uid,
+                    request_class=req.request_class,
+                    speculative=req.speculative)
         try:
             engine_req = replica.admit(req, self._now)
         except ValueError:
@@ -939,6 +1129,12 @@ class ServingFleet:
         out["prefetched"] = len(self.prefetched)
         out["scale_events"] = list(self.scale_events)
         out["replica_seconds"] = self.replica_seconds()
+        if self.spec_mode:
+            out["speculative"] = {
+                "mode": "auto" if self.spec_mode == "auto" else "all",
+                "spec_k": self._mk["spec_k"],
+                "counters": dict(self.spec_counters),
+                "acceptance": self.acceptance.stats()}
         if self.autoscaler is not None:
             out["autoscaler"] = self.autoscaler.stats()
         self.sync_plans()  # once, for both end-state metrics below

@@ -101,6 +101,12 @@ class PlanAware(DispatchPolicy):
     ``now`` — replicas that land inside the deadline sort ahead of those
     that do not.  Replicas without the gauge (the slot engine, test fakes)
     are treated as fitting, which degrades to the pre-deadline ordering.
+
+    Speculating replicas commit more than one token per iteration, so a
+    per-step projection over-estimates them; when a replica exposes a
+    per-class ``expected_token_s(request_class)`` (non-None — the paged
+    replica returns one exactly when speculation is on), the projection
+    uses the request's class-specific seconds-per-committed-token instead.
     """
 
     name = "plan_aware"
@@ -109,11 +115,16 @@ class PlanAware(DispatchPolicy):
     def _fits(req, replica, now: float) -> float:
         if req.deadline_s is None:
             return 1.0
+        horizon = max(1, getattr(req, "max_new_tokens", 1))
+        tok_s = getattr(replica, "expected_token_s", None)
+        if tok_s is not None:
+            per_tok = tok_s(getattr(req, "request_class", ""))
+            if per_tok is not None:
+                return 1.0 if now + per_tok * horizon <= req.deadline_s else 0.0
         step_s = getattr(replica, "expected_step_s", None)
         if step_s is None:
             return 1.0
         step_s = step_s() if callable(step_s) else step_s
-        horizon = max(1, getattr(req, "max_new_tokens", 1))
         return 1.0 if now + step_s * horizon <= req.deadline_s else 0.0
 
     def select(self, req, replicas, eligible, *, now=0.0):

@@ -53,6 +53,7 @@ class FleetRequest:
     arrival_s: float                 # virtual seconds
     deadline_s: float | None = None  # absolute; None -> never shed on age
     eos_id: int | None = None
+    request_class: str = ""          # workload class ("chat", "bulk", ...); ""=unclassified
     # -- routing outcome ------------------------------------------------------
     bucket: int = 0                  # prefill bucket the demand tracker keyed
     replica: int | None = None
@@ -61,6 +62,7 @@ class FleetRequest:
     finished_s: float | None = None
     shed: str = ""                   # "" | "queue_full" | "deadline" | "invalid"
     shed_s: float | None = None      # virtual instant the shed happened
+    speculative: bool | None = None  # admit-time spec decision (None: n/a)
     tokens: int = 0
     exact_share_at_admit: float = 0.0
 
@@ -101,6 +103,10 @@ class TrafficGenerator:
       smaller — the regime where paged KV memory pays off.
     * **Deadlines** — ``deadline_ticks`` ticks after arrival (None: never
       expire).
+    * **Classes** — ``class_mix`` (e.g. ``{"chat": 0.7, "bulk": 0.3}``)
+      stamps each request with a seeded workload class; the router's
+      acceptance-aware speculative policy keys off it.  ``None`` (default)
+      draws no extra randomness, so legacy seeded traces are unchanged.
     """
 
     def __init__(self, *, seed: int = 0, vocab_size: int = 256,
@@ -111,9 +117,15 @@ class TrafficGenerator:
                  new_tokens: tuple[int, int] = (4, 8),
                  long_new_tokens: tuple[int, int] | None = None,
                  deadline_ticks: float | None = None,
-                 prompt_cap: int | None = None):
+                 prompt_cap: int | None = None,
+                 class_mix: dict[str, float] | None = None):
         if arrival_rate <= 0:
             raise ValueError("arrival_rate must be positive")
+        if class_mix is not None:
+            if not class_mix or any(w < 0 for w in class_mix.values()):
+                raise ValueError("class_mix needs non-negative weights")
+            if sum(class_mix.values()) <= 0:
+                raise ValueError("class_mix weights must sum to > 0")
         self.rng = np.random.default_rng(seed)
         self.seed = seed
         self.vocab_size = vocab_size
@@ -126,6 +138,7 @@ class TrafficGenerator:
         self.long_new_tokens = long_new_tokens
         self.deadline_ticks = deadline_ticks
         self.prompt_cap = prompt_cap
+        self.class_mix = class_mix
         self._uid = 0
         self._t = 0.0  # stream clock: carried across trace() calls
 
@@ -152,9 +165,18 @@ class TrafficGenerator:
                   self.rng.integers(1, self.vocab_size, size=plen)]
         deadline = (t + self.deadline_ticks * self.tick_s
                     if self.deadline_ticks is not None else None)
+        # class_mix=None draws no extra randomness, so existing seeded traces
+        # (every bench gate replays one) stay byte-identical.
+        cls = ""
+        if self.class_mix is not None:
+            names = sorted(self.class_mix)
+            weights = np.array([self.class_mix[c] for c in names], dtype=float)
+            u = self.rng.random() * weights.sum()
+            cls = names[int(np.searchsorted(np.cumsum(weights), u, side="right")
+                            .clip(0, len(names) - 1))]
         self._uid += 1
         return FleetRequest(uid=self._uid, prompt=prompt, max_new_tokens=mnt,
-                            arrival_s=t, deadline_s=deadline)
+                            arrival_s=t, deadline_s=deadline, request_class=cls)
 
     def trace(self, n_requests: int) -> list[FleetRequest]:
         """``n_requests`` arrivals in order; repeated calls continue the
@@ -265,7 +287,8 @@ def save_trace(path: str, requests: "list[FleetRequest]") -> None:
             f.write(json.dumps({
                 "uid": r.uid, "arrival_s": r.arrival_s, "prompt": r.prompt,
                 "max_new_tokens": r.max_new_tokens,
-                "deadline_s": r.deadline_s, "eos_id": r.eos_id}) + "\n")
+                "deadline_s": r.deadline_s, "eos_id": r.eos_id,
+                "request_class": r.request_class}) + "\n")
 
 
 def load_trace(path: str) -> "list[FleetRequest]":
@@ -285,6 +308,7 @@ def load_trace(path: str) -> "list[FleetRequest]":
                 deadline_s=(float(d["deadline_s"])
                             if d.get("deadline_s") is not None else None),
                 eos_id=(int(d["eos_id"])
-                        if d.get("eos_id") is not None else None)))
+                        if d.get("eos_id") is not None else None),
+                request_class=str(d.get("request_class", ""))))
     out.sort(key=lambda r: r.arrival_s)
     return out

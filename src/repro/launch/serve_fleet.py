@@ -32,6 +32,19 @@ the load shapes the controller is built for; ``--save-trace`` records the
 generated stream and ``--replay-trace`` replays a recorded one verbatim.
 See DESIGN.md §9.
 
+``--speculative all|auto`` turns on draft-then-verify decoding on paged
+replicas (DESIGN.md §11): ``--draft-model self:K`` builds a truncated
+self-draft from the target's first K layers (``--spec-damp`` scales the
+deeper layers' residual contributions down, controlling the acceptance
+rate), ``--spec-k`` sets the draft tokens per burst, and ``auto`` decides
+spec-vs-plain per request from the measured per-class acceptance rate
+(``--class-mix chat=0.7,bulk=0.3`` stamps seeded workload classes on the
+generated traffic).
+
+    PYTHONPATH=src python -m repro.launch.serve_fleet \
+        --engine paged --speculative auto --draft-model self:1 --spec-k 4 \
+        --class-mix chat=0.7,bulk=0.3 --requests 24
+
 ``--trace-out trace.json`` records every span/event of the run — request
 queue→prefill→decode lifecycles per replica track, engine iterations,
 tuning jobs, router and autoscaler decisions — as a Chrome trace on the
@@ -133,6 +146,22 @@ def main(argv=None) -> dict:
                     help="diurnal: rate-curve period in ticks")
     ap.add_argument("--amplitude", type=float, default=None,
                     help="diurnal: rate swing (default 0.8x --arrival-rate)")
+    ap.add_argument("--speculative", choices=["off", "all", "auto"],
+                    default="off",
+                    help="paged: draft-then-verify decoding — 'all' "
+                         "speculates every request, 'auto' decides per "
+                         "request from measured per-class acceptance")
+    ap.add_argument("--draft-model", default="self:1",
+                    help="draft spec: 'self:K' truncates the target to its "
+                         "first K layers (shared embeddings/head)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative burst")
+    ap.add_argument("--spec-damp", type=float, default=0.02,
+                    help="self-draft: residual damping of the target's "
+                         "deeper layers (0 -> draft == target, alpha = 1)")
+    ap.add_argument("--class-mix", default="",
+                    help="workload-class mixture, e.g. chat=0.7,bulk=0.3 "
+                         "(empty: unclassified traffic)")
     ap.add_argument("--save-trace", default="",
                     help="record the generated request trace to this file")
     ap.add_argument("--replay-trace", default="",
@@ -175,6 +204,19 @@ def main(argv=None) -> dict:
                      "page_size": args.page_size,
                      "pool_pages": args.pool_pages, "chunk": args.chunk,
                      "defrag_threshold": args.defrag_threshold}
+    if args.speculative != "off":
+        if args.engine != "paged":
+            ap.error("--speculative requires --engine paged")
+        from repro.serving import make_self_draft
+        if not args.draft_model.startswith("self:"):
+            ap.error("--draft-model must be 'self:K' (truncated self-draft)")
+        keep = int(args.draft_model.split(":", 1)[1])
+        dcfg, dparams, params = make_self_draft(
+            cfg, params, keep_layers=keep, damp=args.spec_damp)
+        engine_kw.update(
+            speculative=("auto" if args.speculative == "auto" else True),
+            draft_model=build_model(dcfg), draft_params=dparams,
+            spec_k=args.spec_k)
     from repro.obs import Tracer
     from repro.obs.export import write_chrome_trace
 
@@ -193,11 +235,18 @@ def main(argv=None) -> dict:
             window_s=args.scale_window * fleet.tick_s,
             cooldown_s=args.cooldown * fleet.tick_s))
 
+    class_mix = None
+    if args.class_mix:
+        class_mix = {}
+        for part in args.class_mix.split(","):
+            name, _, w = part.partition("=")
+            class_mix[name.strip()] = float(w)
     gen_kw = dict(seed=args.seed, vocab_size=cfg.vocab_size,
                   arrival_rate=args.arrival_rate, tick_s=fleet.tick_s,
                   long_frac=args.long_frac,
                   deadline_ticks=args.deadline_ticks,
-                  prompt_cap=max(args.max_len // 2, 1))
+                  prompt_cap=max(args.max_len // 2, 1),
+                  class_mix=class_mix)
     if args.replay_trace:
         trace = load_trace(args.replay_trace)
     else:

@@ -14,7 +14,11 @@ prints the run's story:
   curve of the paper, recovered from any saved trace;
 * **tuning jobs** — per-job claim time and virtual search cost;
 * **scale timeline** — autoscaler decisions and replica join/retire
-  transitions, in order.
+  transitions, in order;
+* **speculative acceptance** — draft-token acceptance rate per time slice
+  (overall and per request class) with committed-token totals, from the
+  engines' ``spec_burst`` events — the panel that shows whether
+  draft-then-verify is paying off and for which traffic.
 
     PYTHONPATH=src python -m repro.launch.trace_report trace.json
     PYTHONPATH=src python -m repro.launch.trace_report trace.json --json
@@ -67,6 +71,16 @@ def format_report(summary: dict) -> str:
             detail = "  ".join(f"{k}={v}" for k, v in sorted(e.items())
                                if k not in ("t", "name"))
             lines.append(f"  t={e['t']:.4f}  {e['name']:<14} {detail}")
+    acceptance = summary.get("acceptance", [])
+    if acceptance:
+        lines.append("speculative acceptance over time:")
+        for w in acceptance:
+            cls = "  ".join(f"{c or '(none)'}={a:.2f}"
+                            for c, a in w["by_class"].items())
+            lines.append(f"  [{w['t0']:.4f}, {w['t1']:.4f})  "
+                         f"{w['bursts']:>4} bursts  "
+                         f"accept={w['acceptance']:.2f}  "
+                         f"committed={w['committed']}  {cls}")
     return "\n".join(lines)
 
 

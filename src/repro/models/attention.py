@@ -262,6 +262,71 @@ def attn_decode(p: dict, cfg: ArchConfig, x: jax.Array, kind: str, *,
     return y, {"k": ck, "v": cv}
 
 
+# ---------------------------------------------------------------------------
+# Speculative verify (k+1 draft positions against cache, per-lane offsets)
+# ---------------------------------------------------------------------------
+
+
+def attn_verify(p: dict, cfg: ArchConfig, x: jax.Array, kind: str, *,
+                off: jax.Array, cache: dict, provider=None) -> tuple[jax.Array, dict]:
+    """x: (B, C, D); off: (B,) per-lane absolute write offsets.
+
+    The speculative analogue of :func:`attn_chunk`, batched across lanes
+    that each sit at a *different* cache offset (continuous batching), which
+    is exactly what ``attn_chunk``'s shared scalar ``off`` cannot express.
+    Batching matters: verifying lanes one at a time streams the full weights
+    per lane (memory-bound, ≈ one decode step each) and erases the
+    speculative win; one batched call streams them once.
+
+    Rows ``off+C .. size-1`` may hold garbage from a previous over-write
+    (rejected draft positions) — the validity mask hides them, and later
+    steps overwrite them in order, so no explicit rollback pass is needed.
+    Full-length caches only (ring/local layers lose rejected-position
+    history); callers gate on :func:`repro.serving.speculative.spec_exact_reason`.
+    """
+    b, s, _ = x.shape
+    off = jnp.broadcast_to(jnp.asarray(off, jnp.int32), (b,))
+    q, k, v = _qkv(p, cfg, x, provider)
+    q = jnp.swapaxes(q, 1, 2)   # (B, H, C, hd)
+    k = jnp.swapaxes(k, 1, 2)   # (B, KV, C, hd)
+    v = jnp.swapaxes(v, 1, 2)
+    positions = off[:, None] + jnp.arange(s)                # (B, C)
+    q, k = _rope_qk(cfg, q, k, positions)
+
+    size = _cache_size(cache)
+    bi = jnp.arange(b)[:, None, None]
+    hi = jnp.arange(cfg.n_kv_heads)[None, :, None]
+    rows = positions[:, None, :]                            # (B, 1, C)
+    ck = cache["k"].at[bi, hi, rows, :].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bi, hi, rows, :].set(v.astype(cache["v"].dtype))
+
+    slots = jnp.arange(size)
+    ok = slots[None, None, :] <= positions[:, :, None]      # (B, C, T)
+    out = _masked_verify_attention(q, ck, cv, ok, cfg,
+                                   softcap=cfg.attn_softcap if kind == "G" else 0.0)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    y = ops.matmul(out, p["wo"], provider=provider)
+    return y, {"k": ck, "v": cv}
+
+
+def _masked_verify_attention(q, k, v, valid_mask, cfg: ArchConfig,
+                             softcap: float = 0.0):
+    """Multi-query attention with a per-lane (B, C, T) validity mask — the
+    verify analogue of :func:`_masked_chunk_attention`, whose (C, T) mask is
+    shared across the batch and cannot express per-lane offsets."""
+    b, hq, c, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, c, d).astype(jnp.float32) * d ** -0.5
+    s = jnp.einsum("bhgqd,bhtd->bhgqt", qg, k.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid_mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bhtd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, c, d).astype(q.dtype)
+
+
 def _masked_decode_attention(q, k, v, valid_mask, cfg: ArchConfig, softcap: float = 0.0):
     """Single-query attention over the whole cache with an explicit (B, size)
     validity mask (handles causal prefix and ring-buffer semantics)."""

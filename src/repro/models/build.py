@@ -31,6 +31,8 @@ class Model:
     init_cache: Callable[[int, int], Any]
     # chunked prefill (paged serving); None for families without it (audio)
     prefill_chunk: Callable[..., tuple[jax.Array, Any]] | None = None
+    # speculative verify (k+1 positions, per-lane offsets); None for audio
+    verify_step: Callable[..., tuple[jax.Array, Any]] | None = None
 
     def input_specs(self, shape: ShapeConfig, *, batch_override: int | None = None) -> dict:
         return input_specs(self.cfg, shape, batch_override=batch_override)
@@ -62,6 +64,8 @@ def build_model(cfg: ArchConfig) -> Model:
         decode_step=lambda p, cache, tok, **kw: lm.decode_step(p, cfg, cache, tok, **kw),
         init_cache=lambda b, n: lm.init_cache(cfg, b, n),
         prefill_chunk=lambda p, cache, tok, off, **kw: lm.prefill_chunk(
+            p, cfg, cache, tok, off, **kw),
+        verify_step=lambda p, cache, tok, off, **kw: lm.verify_step(
             p, cfg, cache, tok, off, **kw),
     )
 

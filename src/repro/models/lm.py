@@ -61,13 +61,18 @@ def block_params(key: jax.Array, cfg: ArchConfig, kind: str) -> dict:
 def apply_block(p: dict, cfg: ArchConfig, kind: str, x: jax.Array, *,
                 positions: jax.Array | None, pos: jax.Array | None,
                 cache: dict | None, decode: bool, off: jax.Array | None = None,
+                verify: bool = False,
                 provider=None) -> tuple[jax.Array, dict | None, jax.Array]:
     """Returns (x, new_cache, aux_loss).  ``off`` selects the chunked-prefill
     attention path: the slice starts at absolute position ``off`` against a
     partially filled cache (recurrent blocks already carry state through
-    their cache, so R layers need no separate chunk path)."""
+    their cache, so R layers need no separate chunk path).  ``verify``
+    reinterprets ``off`` as per-lane (B,) offsets for the speculative
+    verify path (attention layers only)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "R":
+        if verify:
+            raise ValueError("speculative verify does not support recurrent layers")
         if cfg.family == "ssm":
             x, c = rec.rwkv_block(p, cfg, x, cache=cache, provider=provider)
             return x, c, aux
@@ -81,6 +86,9 @@ def apply_block(p: dict, cfg: ArchConfig, kind: str, x: jax.Array, *,
     xn = apply_norm(p["ln1"], x, cfg.norm)
     if decode:
         a, c = attn.attn_decode(p["attn"], cfg, xn, kind, pos=pos, cache=cache,
+                                provider=provider)
+    elif verify:
+        a, c = attn.attn_verify(p["attn"], cfg, xn, kind, off=off, cache=cache,
                                 provider=provider)
     elif off is not None:
         a, c = attn.attn_chunk(p["attn"], cfg, xn, kind, positions=positions,
@@ -166,10 +174,11 @@ def _embed(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
 
 def _stack_pass(params: dict, cfg: ArchConfig, h: jax.Array, *,
                 positions: jax.Array, caches: dict | None, remat: bool,
-                off: jax.Array | None = None, provider=None
-                ) -> tuple[jax.Array, dict | None, jax.Array]:
+                off: jax.Array | None = None, verify: bool = False,
+                provider=None) -> tuple[jax.Array, dict | None, jax.Array]:
     """Run all layers. caches: {"groups": {i: stacked}, "tail": [...]} or None.
-    ``off`` (with caches) runs the chunked-prefill path for attention layers."""
+    ``off`` (with caches) runs the chunked-prefill path for attention layers;
+    ``verify`` the speculative verify path (``off`` per-lane)."""
     pat, reps, tail = _pattern_split(cfg)
 
     def group_body(carry, xs):
@@ -180,7 +189,8 @@ def _stack_pass(params: dict, cfg: ArchConfig, h: jax.Array, *,
             c_in = layer_cache[str(i)] if layer_cache is not None else None
             hh, c_out, a = apply_block(layer_params[str(i)], cfg, kind, hh,
                                        positions=positions, pos=None, cache=c_in,
-                                       decode=False, off=off, provider=provider)
+                                       decode=False, off=off, verify=verify,
+                                       provider=provider)
             aux = aux + a
             if c_out is not None:
                 new_cache[str(i)] = c_out
@@ -202,7 +212,8 @@ def _stack_pass(params: dict, cfg: ArchConfig, h: jax.Array, *,
         c_in = caches["tail"][j] if caches is not None else None
         h, c_out, a = apply_block(params["tail"][j], cfg, kind, h,
                                   positions=positions, pos=None, cache=c_in,
-                                  decode=False, off=off, provider=provider)
+                                  decode=False, off=off, verify=verify,
+                                  provider=provider)
         aux = aux + a
         if caches is not None:
             new_caches["tail"].append(c_out)
@@ -330,6 +341,35 @@ def prefill_chunk(params: dict, cfg: ArchConfig, cache: dict, tokens: jax.Array,
     h_last = apply_norm(params["final_norm"], h[:, -1:, :], cfg.norm)
     logits = _lm_head(params, cfg, h_last, provider=provider)
     return logits[:, 0, :], new_caches
+
+
+def verify_step(params: dict, cfg: ArchConfig, cache: dict, tokens: jax.Array,
+                off, *, provider=None) -> tuple[jax.Array, dict]:
+    """Speculative verify: run ``tokens`` (B, C) — the pending token plus the
+    draft burst — through the stack at per-lane absolute offsets ``off``
+    (B,), returning logits for *every* position (B, C, V) plus the updated
+    cache.
+
+    ``logits[:, j]`` is the target distribution after the first ``j`` draft
+    tokens, so greedy acceptance compares ``argmax(logits[:, j])`` against
+    draft token ``j+1``.  The cache gains all C rows; rejected rows are
+    "rolled back" implicitly — validity masks hide rows at or beyond each
+    lane's committed length, and later bursts overwrite them in order
+    (full-length caches only; see :func:`repro.models.attention.attn_verify`).
+    """
+    if cfg.vision_tokens:
+        raise ValueError("speculative verify does not support vision-prefix archs")
+    b, s = tokens.shape
+    off = jnp.broadcast_to(jnp.asarray(off, jnp.int32), (b,))
+    h = _embed(params, cfg, tokens)
+    positions = off[:, None] + jnp.arange(s, dtype=jnp.int32)
+    h, new_caches, _ = _stack_pass(params, cfg, h, positions=positions,
+                                   caches=cache, remat=False, off=off,
+                                   verify=True, provider=provider)
+    new_caches["t"] = off + s
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = _lm_head(params, cfg, h, provider=provider)
+    return logits, new_caches
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: dict, tokens: jax.Array, *,

@@ -117,9 +117,48 @@ def scale_timeline(records: "list[dict]") -> list[dict]:
     return out
 
 
+def acceptance_timeline(records: "list[dict]", windows: int = 8) -> list[dict]:
+    """Speculative acceptance rate over time, from ``spec_burst`` events.
+
+    Splits the trace's burst activity into ``windows`` equal time slices;
+    each row reports the slice's acceptance rate (accepted / proposed draft
+    tokens), committed-token total, and per-class acceptance — the panel
+    that shows a class's draftability drifting and the auto router reacting.
+    """
+    bursts = [(r["t"], r["attrs"]) for r in records
+              if r["kind"] == "event" and r["name"] == "spec_burst"]
+    if not bursts:
+        return []
+    t0 = min(t for t, _ in bursts)
+    t1 = max(t for t, _ in bursts)
+    width = (t1 - t0) / windows or 1.0
+    out = []
+    for w in range(windows):
+        lo = t0 + w * width
+        hi = t0 + (w + 1) * width
+        sel = [a for t, a in bursts
+               if lo <= t < hi or (w == windows - 1 and t == t1)]
+        prop = sum(a.get("proposed", 0) for a in sel)
+        acc = sum(a.get("accepted", 0) for a in sel)
+        by_cls: dict[str, list[int]] = {}
+        for a in sel:
+            pa = by_cls.setdefault(str(a.get("request_class", "")), [0, 0])
+            pa[0] += a.get("proposed", 0)
+            pa[1] += a.get("accepted", 0)
+        out.append({
+            "t0": lo, "t1": hi, "bursts": len(sel),
+            "proposed": prop, "accepted": acc,
+            "committed": sum(a.get("committed", 0) for a in sel),
+            "acceptance": acc / prop if prop else 0.0,
+            "by_class": {cls: (pa[1] / pa[0] if pa[0] else 0.0)
+                         for cls, pa in sorted(by_cls.items())}})
+    return out
+
+
 def summarize(records: "list[dict]", windows: int = 8) -> dict:
     """Everything the CLI prints, as one JSON-ready object."""
     return {"latency": latency_breakdown(records),
             "tier_shares": tier_shares(records, windows),
             "tuning_jobs": tuning_jobs(records),
-            "scale_timeline": scale_timeline(records)}
+            "scale_timeline": scale_timeline(records),
+            "acceptance": acceptance_timeline(records, windows)}

@@ -1,6 +1,13 @@
 from repro.serving.engine import Request, ServingEngine, SlotsFull
 from repro.serving.paged import PagedServingEngine
 from repro.serving.pages import PagesExhausted, PageTable
+from repro.serving.speculative import (
+    expected_committed_tokens,
+    make_self_draft,
+    spec_exact_reason,
+    spec_gain,
+)
 
 __all__ = ["PagedServingEngine", "PageTable", "PagesExhausted", "Request",
-           "ServingEngine", "SlotsFull"]
+           "ServingEngine", "SlotsFull", "expected_committed_tokens",
+           "make_self_draft", "spec_exact_reason", "spec_gain"]

@@ -70,6 +70,9 @@ class Request:
     eos_id: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # speculative decode (paged engine only; the slot engine ignores both):
+    speculative: bool = False
+    request_class: str = ""
 
 
 class ServingEngine:
@@ -235,7 +238,9 @@ class ServingEngine:
         else:
             logits, cache1 = self._prefill(self.params, batch,
                                            jnp.asarray(n, jnp.int32))
-        tok = int(jnp.argmax(logits[0]))
+        # np.asarray forces the single host transfer here; int(jnp.argmax(...))
+        # would add a second device sync for the scalar read.
+        tok = int(np.asarray(jnp.argmax(logits[0])))
         req.generated.append(tok)
         if max_new_tokens <= 0 or (eos_id is not None and tok == eos_id) or \
                 len(req.generated) >= max_new_tokens:

@@ -49,6 +49,7 @@ from repro.models.build import Model
 from repro.obs import NULL_TRACER
 from repro.serving.engine import Request, SlotsFull
 from repro.serving.pages import PagesExhausted, PageTable
+from repro.serving.speculative import spec_exact_reason
 
 
 class PagedServingEngine:
@@ -66,7 +67,9 @@ class PagedServingEngine:
                  admit_cap: int | None = None,
                  defrag_threshold: float | None = None, provider=None,
                  plan: ExecutionPlan | None = None,
-                 record_logits: bool = False):
+                 record_logits: bool = False,
+                 draft_model: Model | None = None, draft_params: Any = None,
+                 spec_k: int = 0):
         cfg = model.cfg
         if model.prefill_chunk is None or cfg.family == "audio":
             raise ValueError(f"paged serving does not support {cfg.family!r}")
@@ -74,6 +77,22 @@ class PagedServingEngine:
             raise ValueError("paged serving does not support vision-prefix archs")
         if max_ctx % page_size:
             raise ValueError("max_ctx must be a multiple of page_size")
+        self.spec_k = int(spec_k)
+        self._spec = draft_model is not None and self.spec_k > 0
+        if self._spec:
+            for c in (cfg, draft_model.cfg):
+                reason = spec_exact_reason(c)
+                if reason:
+                    raise ValueError(
+                        f"speculative decoding unsupported for {c.name}: {reason}")
+            if draft_params is None:
+                raise ValueError("speculative decoding needs draft_params")
+            if draft_model.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError("draft and target must share a vocabulary")
+            if self.spec_k + 1 > max_ctx:
+                raise ValueError("spec_k + 1 exceeds max_ctx")
+        self.draft_model = draft_model if self._spec else None
+        self.draft_params = draft_params if self._spec else None
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -105,6 +124,26 @@ class PagedServingEngine:
             ba = next(i for i in range(a.ndim) if a.shape[i] != b.shape[i])
             diff = [i for i in range(a.ndim) if a.shape[i] != c.shape[i]]
             self._info.append((ba, diff[0] if diff else None))
+        self._t_idx = _t_leaf_index(probe_a)
+
+        # ---- draft model cache (dense lane strips; the draft is small) ----
+        self._draft_ctx: dict[int, int] = {}      # uid -> draft rows in sync
+        if self._spec:
+            dm = draft_model
+            dp_a = jax.eval_shape(lambda: dm.init_cache(2, max_ctx))
+            dp_b = jax.eval_shape(lambda: dm.init_cache(3, max_ctx))
+            dl_a, self._draft_treedef = jax.tree_util.tree_flatten(dp_a)
+            dl_b = jax.tree_util.tree_leaves(dp_b)
+            self._draft_info = [
+                next(i for i in range(a.ndim) if a.shape[i] != b.shape[i])
+                for a, b in zip(dl_a, dl_b)]
+            self._draft_t_idx = _t_leaf_index(dp_a)
+            self._draft_leaves = jax.tree_util.tree_leaves(
+                dm.init_cache(decode_batch, max_ctx))
+        # worst-case page growth of one lane in one step (the admission
+        # watermark reserve): a speculative burst writes spec_k+1 rows
+        self._growth_pages = (-(-(self.spec_k + 1) // page_size)
+                              if self._spec else 1)
 
         # ---- storage: paged leaves -> pool-flat, lane leaves -> dense -----
         dense = jax.tree_util.tree_leaves(model.init_cache(decode_batch, max_ctx))
@@ -132,6 +171,13 @@ class PagedServingEngine:
         self.last_logits = None
         self.chunk_logits: dict[int, np.ndarray] = {}
         self.preemptions = 0
+        # speculative-decode counters + event feed (fleet drains the events
+        # into its per-class acceptance tracker)
+        self.spec_bursts = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_committed = 0
+        self._spec_events: list[dict] = []
         self.defrags = 0                     # pool compactions actually applied
         self.prefill_true_tokens = 0
         self.prefill_padded_tokens = 0       # == true: chunked prefill pads nothing
@@ -153,7 +199,9 @@ class PagedServingEngine:
                 self.plan = plan_serving_paged(
                     cfg, provider.pipeline, decode_batch=decode_batch,
                     page_size=page_size, pages_per_seq=self.pages_per_seq,
-                    chunk_lens=tuple(range(1, self.chunk + 1)))
+                    chunk_lens=tuple(range(1, self.chunk + 1)),
+                    spec_k=self.spec_k if self._spec else 0,
+                    draft_cfg=draft_model.cfg if self._spec else None)
             provider.plan = self.plan
         self._make_fns()
 
@@ -256,6 +304,98 @@ class PagedServingEngine:
         self._chunk = jax.jit(chunk_fn)   # one trace per chunk length
         self._reset = jax.jit(reset_fn)
 
+        if not self._spec:
+            return
+        draft, K = self.draft_model, self.spec_k
+        draft_info, dtreedef = self._draft_info, self._draft_treedef
+
+        def verify_fn(params, leaves, toks, offs, idx, active):
+            """Batched speculative verify: toks (B, K+1) at per-lane cache
+            offsets ``offs`` — the verify analogue of decode_fn.  One call
+            for all lanes: per-lane verify would stream the full weights per
+            lane (memory-bound ≈ one decode each) and erase the spec win."""
+            dense = []
+            for leaf, (ba, la) in zip(leaves, info):
+                if la is None:
+                    dense.append(leaf)
+                else:
+                    taken, pa = gather(leaf, idx, ba, la)
+                    dense.append(jnp.moveaxis(taken, (pa, pa + 1), (ba, la)))
+            cache = jax.tree_util.tree_unflatten(treedef, dense)
+            logits, new_cache = model.verify_step(params, cache, toks, offs,
+                                                  provider=provider)
+            C = toks.shape[1]
+            posn = offs[:, None] + jnp.arange(C)                # (B, C)
+            rows = jnp.take_along_axis(idx, posn, axis=1)       # (B, C)
+            new_dense = jax.tree_util.tree_leaves(new_cache)
+            out = []
+            for leaf, new, (ba, la) in zip(leaves, new_dense, info):
+                if la is None:
+                    mshape = [1] * leaf.ndim
+                    mshape[ba] = B
+                    out.append(jnp.where(active.reshape(mshape),
+                                         new.astype(leaf.dtype), leaf))
+                else:
+                    pa = pool_axis(ba, la)
+                    dn = jnp.moveaxis(new, (ba, la), (0, 1))    # (B, T, *rest)
+                    rowvals = dn[jnp.arange(B)[:, None], posn]  # (B, C, *rest)
+                    pm = jnp.moveaxis(leaf, pa, 0)
+                    # inactive lanes carry idx == 0: their C rows land on the
+                    # trash page (duplicate writes race harmlessly there)
+                    pm = pm.at[rows].set(rowvals.astype(leaf.dtype))
+                    out.append(jnp.moveaxis(pm, 0, pa))
+            return logits, out
+
+        def draft_burst_fn(dparams, leaves, toks, active):
+            """K+1 greedy draft decode steps in one scan: proposals d1..dK
+            plus one extra step that only ingests dK's KV row, so an
+            all-accept burst leaves the draft cache fully caught up."""
+            cache = jax.tree_util.tree_unflatten(dtreedef, leaves)
+
+            def body(carry, _):
+                c, tok = carry
+                logits, c = draft.decode_step(dparams, c, tok, provider=provider)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (c, nxt), nxt
+
+            (cache, _), props = jax.lax.scan(body, (cache, toks), None,
+                                             length=K + 1)
+            out = []
+            for leaf, new, ba in zip(leaves, jax.tree_util.tree_leaves(cache),
+                                     draft_info):
+                mshape = [1] * leaf.ndim
+                mshape[ba] = B
+                out.append(jnp.where(active.reshape(mshape),
+                                     new.astype(leaf.dtype), leaf))
+            return props, out
+
+        def draft_chunk_fn(dparams, leaves, toks, off, lane):
+            """Mirror one target prefill chunk into the draft's dense cache
+            (keeps the draft in sync so bursts start from committed state)."""
+            view = [jax.lax.dynamic_slice_in_dim(leaf, lane, 1, axis=ba)
+                    for leaf, ba in zip(leaves, draft_info)]
+            cache = jax.tree_util.tree_unflatten(dtreedef, view)
+            _, new_cache = draft.prefill_chunk(dparams, cache, toks, off,
+                                               provider=provider)
+            new_view = jax.tree_util.tree_leaves(new_cache)
+            return [jax.lax.dynamic_update_slice_in_dim(
+                        leaf, new.astype(leaf.dtype), lane, axis=ba)
+                    for leaf, new, ba in zip(leaves, new_view, draft_info)]
+
+        def draft_reset_fn(leaves, lane):
+            out = []
+            for leaf, ba in zip(leaves, draft_info):
+                zshape = list(leaf.shape)
+                zshape[ba] = 1
+                out.append(jax.lax.dynamic_update_slice_in_dim(
+                    leaf, jnp.zeros(zshape, leaf.dtype), lane, axis=ba))
+            return out
+
+        self._verify = jax.jit(verify_fn)
+        self._draft_burst = jax.jit(draft_burst_fn)
+        self._draft_chunk = jax.jit(draft_chunk_fn)
+        self._draft_reset = jax.jit(draft_reset_fn)
+
     # ------------------------------------------------------------------
     # admission surfaces (router-compatible)
     # ------------------------------------------------------------------
@@ -302,9 +442,15 @@ class PagedServingEngine:
     # request admission
     # ------------------------------------------------------------------
     def add_request(self, prompt: list[int], max_new_tokens: int = 16,
-                    eos_id: int | None = None) -> Request:
+                    eos_id: int | None = None, *,
+                    speculative: bool | None = None,
+                    request_class: str = "") -> Request:
         """Enqueue a request; prefill happens chunk-by-chunk inside
         :meth:`step` (no synchronous work here — admission is O(1)).
+
+        ``speculative=None`` follows the engine default (speculate whenever
+        a draft model is configured); an explicit False pins the request to
+        plain decode (the fleet's acceptance-aware router uses this).
 
         Raises :class:`SlotsFull` at the admission cap and ``ValueError``
         for a request the pool can never hold.
@@ -325,7 +471,10 @@ class PagedServingEngine:
             raise SlotsFull(
                 f"admission cap {self.admit_cap} reached")
         self._uid += 1
-        req = Request(self._uid, list(prompt), max_new_tokens, eos_id)
+        req = Request(self._uid, list(prompt), max_new_tokens, eos_id,
+                      speculative=(self._spec if speculative is None
+                                   else bool(speculative) and self._spec),
+                      request_class=request_class)
         self.waiting.append(req)
         self._ptoks[req.uid] = list(prompt)
         return req
@@ -353,7 +502,9 @@ class PagedServingEngine:
         # the prefill just converts the new request into preemption churn.
         admits: list[tuple[Request, int]] = []
         free_lanes = [i for i, r in enumerate(self.lanes) if r is None]
-        admit_free = sim_free - sum(1 for r in self.lanes if r is not None)
+        admit_free = sim_free - sum(
+            self._growth_pages if (self._spec and r.speculative) else 1
+            for r in self.lanes if r is not None)
         for lane, req in zip(free_lanes, self.waiting):
             need = pages_for(len(self._ptoks[req.uid]))
             if need > admit_free:
@@ -370,6 +521,7 @@ class PagedServingEngine:
                 prefilling.append(r)
         prefilling.extend(r for r, _ in admits)
         chunks: list[tuple[int, int, int, bool]] = []
+        draft_sync: list[int] = []           # chunk mirrors into the draft
         budget = self.chunks_per_step
         for r in prefilling:
             if budget <= 0:
@@ -388,6 +540,8 @@ class PagedServingEngine:
             sim_free -= max(need, 0)
             held[r.uid] = held.get(r.uid, 0) + max(need, 0)
             chunks.append((r.uid, off, c, off + c >= n))
+            if self._spec and r.speculative:
+                draft_sync.append(c)
             budget -= 1
 
         # decode lanes + page-pressure preemption (evict youngest decoders)
@@ -395,7 +549,10 @@ class PagedServingEngine:
         decoders = [r for r in self.lanes
                     if r is not None and r.uid not in chunk_uids
                     and self._off.get(r.uid, 0) >= len(self._ptoks[r.uid])]
-        needs = {r.uid: pages_for(self._ctx[r.uid] + 1) - held.get(r.uid, 0)
+        spec_set = {r.uid for r in decoders if self._spec_ready(r)}
+        needs = {r.uid: pages_for(self._ctx[r.uid]
+                                  + (self.spec_k + 1 if r.uid in spec_set else 1)
+                                  ) - held.get(r.uid, 0)
                  for r in decoders}
         preempts: list[int] = []
         total_need = sum(max(v, 0) for v in needs.values())
@@ -407,6 +564,7 @@ class PagedServingEngine:
                 if total_need <= sim_free:
                     break
         decode_uids = [r.uid for r in decoders if r.uid not in preempts]
+        spec_uids = [u for u in decode_uids if u in spec_set]
 
         # deadlock breaker: >= 2 prefilling holders, none can grow, nothing
         # decoding to release pages naturally -> evict the youngest holder
@@ -416,17 +574,43 @@ class PagedServingEngine:
             if len(holders) > 1:
                 stall_preempts.append(max(h.uid for h in holders))
         return {"admits": admits, "chunks": chunks,
-                "decode_uids": decode_uids, "preempts": preempts,
+                "decode_uids": decode_uids, "spec_uids": spec_uids,
+                "draft_sync_lens": draft_sync, "preempts": preempts,
                 "stall_preempts": stall_preempts}
+
+    def _spec_ready(self, req: Request) -> bool:
+        """Can this decoding lane run a draft-then-verify burst next step?
+
+        Pure state inspection (scheduler contract: :meth:`planned_work`'s
+        preview must equal :meth:`step`'s execution).  A lane whose draft
+        cache fell out of sync — it ran plain steps near the context or
+        token budget bound — stays plain: both bounds only tighten as the
+        request ages, so the lane could never speculate again anyway.
+        """
+        if not self._spec or not req.speculative:
+            return False
+        ctx = self._ctx[req.uid]
+        if self._draft_ctx.get(req.uid) != ctx:
+            return False
+        if ctx + self.spec_k + 1 > self.max_ctx:
+            return False
+        # fewer than 2 tokens of budget left: a burst cannot beat one
+        # plain decode step (the correction token alone finishes it)
+        return req.max_new_tokens - len(req.generated) >= 2
 
     def planned_work(self) -> dict:
         """Preview of the next :meth:`step`'s work for external cost models:
         chunk lengths to run, whether a batched decode runs, and admissions."""
         acts = self._schedule()
+        plain = len(acts["decode_uids"]) - len(acts["spec_uids"])
         return {
             "chunk_lens": [c for _, _, c, _ in acts["chunks"]],
-            "decode": bool(acts["decode_uids"]),
-            "decode_lanes": len(acts["decode_uids"]),
+            "decode": plain > 0,
+            "decode_lanes": plain,
+            "spec_lanes": len(acts["spec_uids"]),
+            "draft_steps": self.spec_k + 1 if acts["spec_uids"] else 0,
+            "verify_len": self.spec_k + 1 if acts["spec_uids"] else 0,
+            "draft_sync_lens": list(acts["draft_sync_lens"]),
             "admits": len(acts["admits"]),
             "preempts": len(acts["preempts"]) + len(acts["stall_preempts"]),
         }
@@ -527,6 +711,7 @@ class PagedServingEngine:
             self._prefill_fifo.remove(uid)
         self._off.pop(uid, None)
         self._ctx.pop(uid, None)
+        self._draft_ctx.pop(uid, None)
         if req.generated:
             self._ptoks[uid] = req.prompt + req.generated[:-1]
             self._skip_emit.add(uid)
@@ -548,8 +733,130 @@ class PagedServingEngine:
             self._prefill_fifo.remove(uid)
         self._off.pop(uid, None)
         self._ctx.pop(uid, None)
+        self._draft_ctx.pop(uid, None)
         self._ptoks.pop(uid, None)
         self._skip_emit.discard(uid)
+
+    def drain_spec_events(self) -> list[dict]:
+        """Hand off accumulated per-burst speculative events (uid, class,
+        proposed, accepted, committed) — the fleet feeds these into its
+        per-request-class acceptance tracker."""
+        out, self._spec_events = self._spec_events, []
+        return out
+
+    def _spec_step(self, spec_uids: list[int]) -> list[Request]:
+        """One draft-then-verify burst over the speculating lanes.
+
+        Draft proposes K tokens (K+1 scanned decode steps — the extra step
+        ingests the last proposal's KV row so an all-accept burst leaves the
+        draft caught up), the target verifies all lanes in ONE batched
+        ``verify_step``, and greedy acceptance commits the longest agreeing
+        prefix plus the target's correction token — bit-exact vs plain
+        greedy decode.  Rejected cache rows need no explicit rollback: the
+        host-side ``_ctx`` is the truth, the decode-position leaf is
+        rewritten from it below, and stale rows are masked (validity masks
+        key on position) until later writes overwrite them in order.
+
+        Exactly three host syncs per burst regardless of lane count:
+        proposals, greedy verify argmax, and nothing per-lane.
+        """
+        K, B = self.spec_k, self.decode_batch
+        toks = np.zeros(B, np.int32)
+        offs = np.zeros(B, np.int32)
+        idx = np.zeros((B, self.max_ctx), np.int32)
+        active = np.zeros(B, bool)
+        spec_lanes: list[tuple[int, Request]] = []
+        for lane, req in enumerate(self.lanes):
+            if req is None or req.uid not in spec_uids:
+                continue
+            uid, ctx = req.uid, self._ctx[req.uid]
+            self.table.ensure(uid, ctx + K + 1)   # simulation guaranteed it
+            toks[lane] = req.generated[-1]
+            offs[lane] = ctx
+            idx[lane] = self.table.flat_rows(uid, self.max_ctx)
+            active[lane] = True
+            spec_lanes.append((lane, req))
+
+        # Rebuild the draft's decode positions from host truth: the leaf
+        # still carries the previous burst's full K+1 advance, which the
+        # acceptance decision may have partially rolled back.
+        dt = np.zeros(B, np.int32)
+        for lane, req in spec_lanes:
+            dt[lane] = self._draft_ctx[req.uid]
+        self._draft_leaves[self._draft_t_idx] = jnp.asarray(dt)
+        if self.tracer.enabled and self.trace_compute:
+            with self.tracer.span("draft_burst", self.trace_track,
+                                  lanes=len(spec_lanes), k=K):
+                props, self._draft_leaves = self._draft_burst(
+                    self.draft_params, self._draft_leaves,
+                    jnp.asarray(toks), jnp.asarray(active))
+        else:
+            props, self._draft_leaves = self._draft_burst(
+                self.draft_params, self._draft_leaves,
+                jnp.asarray(toks), jnp.asarray(active))
+        props_host = np.asarray(props)            # (K+1, B); row K is ingest-only
+
+        vt = np.zeros((B, K + 1), np.int32)
+        vt[:, 0] = toks                            # pending token first
+        vt[:, 1:] = props_host[:K].T
+        if self.tracer.enabled and self.trace_compute:
+            with self.tracer.span("verify", self.trace_track,
+                                  lanes=len(spec_lanes), k=K):
+                logits, self.leaves = self._verify(
+                    self.params, self.leaves, jnp.asarray(vt),
+                    jnp.asarray(offs), jnp.asarray(idx), jnp.asarray(active))
+        else:
+            logits, self.leaves = self._verify(
+                self.params, self.leaves, jnp.asarray(vt), jnp.asarray(offs),
+                jnp.asarray(idx), jnp.asarray(active))
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))   # (B, K+1)
+
+        finished: list[Request] = []
+        for lane, req in spec_lanes:
+            uid = req.uid
+            d = props_host[:K, lane]
+            g = greedy[lane]
+            a = 0
+            while a < K and int(g[a]) == int(d[a]):
+                a += 1
+            done = False
+            committed = 0
+            for tok in [int(x) for x in d[:a]] + [int(g[a])]:
+                req.generated.append(tok)
+                committed += 1
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.generated) >= req.max_new_tokens:
+                    done = True
+                    break
+            self.spec_bursts += 1
+            self.spec_proposed += K
+            self.spec_accepted += a
+            self.spec_committed += committed
+            new_ctx = len(req.prompt) + len(req.generated) - 1
+            self._ctx[uid] = new_ctx
+            self._draft_ctx[uid] = new_ctx
+            self._spec_events.append({
+                "uid": uid, "request_class": req.request_class,
+                "proposed": K, "accepted": a, "committed": committed})
+            if self.tracer.enabled:
+                self.tracer.event("spec_burst", self.trace_track, uid=uid,
+                                  accepted=a, proposed=K, committed=committed,
+                                  request_class=req.request_class)
+            if done:
+                req.done = True
+                finished.append(req)
+                self._release(req)
+
+        # Wholesale decode-position rollback: overwrite the t leaf from the
+        # host _ctx map (verify advanced every speculating lane by K+1; the
+        # accepted prefix may be shorter).  Non-speculating lanes keep their
+        # exact current positions, so this is a no-op for them.
+        t_host = np.zeros(B, np.int32)
+        for lane, req in enumerate(self.lanes):
+            if req is not None and req.uid in self._ctx:
+                t_host[lane] = self._ctx[req.uid]
+        self.leaves[self._t_idx] = jnp.asarray(t_host)
+        return finished
 
     def step(self) -> list[Request]:
         """One iteration: admit, one prefill chunk each (bounded), one
@@ -574,6 +881,7 @@ class PagedServingEngine:
                 "schedule", self.trace_track, step=self._steps,
                 admits=len(acts["admits"]), chunks=len(acts["chunks"]),
                 decode_lanes=len(acts["decode_uids"]),
+                spec_lanes=len(acts["spec_uids"]),
                 preempts=len(acts["preempts"]) + len(acts["stall_preempts"]),
                 waiting=len(self.waiting))
         finished: list[Request] = []
@@ -586,7 +894,14 @@ class PagedServingEngine:
             self._off[req.uid] = 0
             self._ctx[req.uid] = 0
             self.leaves = self._reset(self.leaves, lane)
+            if self._spec and req.speculative:
+                self._draft_ctx[req.uid] = 0
+                self._draft_leaves = self._draft_reset(self._draft_leaves, lane)
 
+        # final-chunk emissions are batched into one argmax + one host pull
+        # at the end of the loop (the old per-request int(jnp.argmax(...))
+        # forced one device sync per finishing prefill)
+        pending_finals: list[tuple[int, Request, jax.Array]] = []
         for uid, off, c, final in acts["chunks"]:
             self.table.ensure(uid, off + c)   # simulation guarantees success
             req = next(r for r in self.lanes if r is not None and r.uid == uid)
@@ -607,6 +922,22 @@ class PagedServingEngine:
                     self.params, self.leaves,
                     jnp.asarray([toks], jnp.int32), jnp.asarray(off, jnp.int32),
                     jnp.asarray(lane, jnp.int32), idx_lane)
+            if self._spec and req.speculative:
+                if self.tracer.enabled and self.trace_compute:
+                    with self.tracer.span("draft_sync", self.trace_track,
+                                          uid=uid, len=c):
+                        self._draft_leaves = self._draft_chunk(
+                            self.draft_params, self._draft_leaves,
+                            jnp.asarray([toks], jnp.int32),
+                            jnp.asarray(off, jnp.int32),
+                            jnp.asarray(lane, jnp.int32))
+                else:
+                    self._draft_leaves = self._draft_chunk(
+                        self.draft_params, self._draft_leaves,
+                        jnp.asarray([toks], jnp.int32),
+                        jnp.asarray(off, jnp.int32),
+                        jnp.asarray(lane, jnp.int32))
+                self._draft_ctx[uid] = off + c
             self._off[uid] = off + c
             self._ctx[uid] = off + c
             self.prefill_true_tokens += c
@@ -615,21 +946,31 @@ class PagedServingEngine:
                 if uid in self._skip_emit:
                     self._skip_emit.discard(uid)   # resume: token already held
                 else:
-                    tok = int(jnp.argmax(logits))
-                    if self.record_logits:
-                        self.chunk_logits[uid] = np.asarray(logits)
-                    req.generated.append(tok)
-                    if req.max_new_tokens <= 0 or (
-                            req.eos_id is not None and tok == req.eos_id) or \
-                            len(req.generated) >= req.max_new_tokens:
-                        req.done = True
-                        finished.append(req)
-                        self._release(req)
+                    pending_finals.append((uid, req, logits))
+
+        if pending_finals:
+            first = np.asarray(jnp.argmax(
+                jnp.stack([l for _, _, l in pending_finals]), axis=-1))
+            for (uid, req, logits), tok in zip(pending_finals, first):
+                if self.record_logits:
+                    self.chunk_logits[uid] = np.asarray(logits)
+                tok = int(tok)
+                req.generated.append(tok)
+                if req.max_new_tokens <= 0 or (
+                        req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    finished.append(req)
+                    self._release(req)
 
         for uid in acts["preempts"] + acts["stall_preempts"]:
             self._preempt(uid)
 
-        decode_uids = [u for u in acts["decode_uids"]]
+        if acts["spec_uids"]:
+            finished.extend(self._spec_step(acts["spec_uids"]))
+
+        spec_set = set(acts["spec_uids"])
+        decode_uids = [u for u in acts["decode_uids"] if u not in spec_set]
         if decode_uids:
             B = self.decode_batch
             toks = np.zeros(B, np.int32)
@@ -678,3 +1019,14 @@ class PagedServingEngine:
             if not self.in_flight:
                 break
             self.step()
+
+
+def _t_leaf_index(cache_tree) -> int:
+    """Flat-leaf index of the cache's top-level ``t`` (decode positions)
+    vector — the one leaf speculative acceptance rewrites wholesale from
+    host state after each burst."""
+    paths = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    for i, (path, _) in enumerate(paths):
+        if len(path) == 1 and getattr(path[0], "key", None) == "t":
+            return i
+    raise ValueError("cache pytree has no top-level 't' leaf")
