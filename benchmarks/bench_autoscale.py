@@ -222,6 +222,15 @@ def run(preset: str = "smoke") -> list[tuple]:
             "dropped_requests": drops,
             "schedule_mismatches": mismatches,
             "pass": ok,
+        }, metrics={
+            "elastic_p99_ticks": elastic["latency_ticks"]["p99"],
+            "elastic_shed_rate": elastic["shed_rate"],
+            "elastic_replica_seconds": elastic["replica_seconds"],
+            "scale_ups": len(joins),
+            "scale_downs": len(retires),
+        }, gated={
+            "elastic_p99_ticks": "lower",
+            "elastic_shed_rate": "lower",
         })
         return rows
     finally:

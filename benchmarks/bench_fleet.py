@@ -160,6 +160,15 @@ def run(preset: str = "smoke") -> list[tuple]:
             "round_robin": rr,
             "plan_aware_prefetch": pa,
             "fleet_vs_single_throughput": scale,
+            "pass": bool(scale > 1 and policy_ok),
+        }, metrics={
+            "fleet_vs_single_throughput": scale,
+            "plan_aware_p95_ticks": p95_pa,
+            "round_robin_p95_ticks": p95_rr,
+            "policy_win": p95_rr / max(p95_pa, 1e-9),
+        }, gated={
+            "fleet_vs_single_throughput": "higher",
+            "plan_aware_p95_ticks": "lower",
         })
         return rows
     finally:

@@ -26,7 +26,10 @@ def run() -> list[tuple]:
                          "tuned_s": d["tuned_seconds"],
                          "max_speedup": speedup,
                          "search_time_s": d["search_time_s"]}
-    common.save_result("fig1_full_tuning", payload)
+    speedups = [d["max_speedup"] for d in payload.values()]
+    common.save_result("fig1_full_tuning", payload, metrics={
+        "mean_max_speedup": sum(speedups) / len(speedups) if speedups else 0.0,
+    }, gated={"mean_max_speedup": "higher"})
     return rows
 
 

@@ -40,7 +40,13 @@ def run() -> list[tuple]:
             payload[f"{src}->{dst}/{mode}"] = {
                 "seconds": m.seconds, "native_ratio": ratio,
                 "untuned_speedup": untuned[dst] / m.seconds}
-    common.save_result("gemm_transfer", payload)
+    cells = [v for v in payload.values() if isinstance(v, dict)
+             and "untuned_speedup" in v]
+    ups = [v["untuned_speedup"] for v in cells]
+    common.save_result("gemm_transfer", payload, metrics={
+        "mean_untuned_speedup": sum(ups) / len(ups) if ups else 0.0,
+        "valid_transfers": len(cells),
+    }, gated={"mean_untuned_speedup": "higher"})
     return rows
 
 

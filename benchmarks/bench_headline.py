@@ -79,7 +79,15 @@ def run() -> list[tuple]:
                  f"vs Eq.1 {mean(agg['pct_max']):.1f}% — compat-aware donor selection"))
     payload["mean"]["v2_pct_max"] = mean(v2_pct)
     payload["mean"]["v2_pct_max_capped"] = mean(v2_pct_capped)
-    common.save_result("headline", payload)
+    common.save_result("headline", payload, metrics={
+        "pct_of_max": payload["mean"]["pct_max"],
+        "pct_of_search_time": payload["mean"]["pct_time"],
+        "ansor_match_ratio": payload["mean"]["match_ratio"],
+        "v2_pct_of_max_capped": payload["mean"]["v2_pct_max_capped"],
+    }, gated={
+        "pct_of_max": "higher",
+        "v2_pct_of_max_capped": "higher",
+    })
     return rows
 
 

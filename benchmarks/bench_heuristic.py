@@ -40,7 +40,10 @@ def run() -> list[tuple]:
         payload[arch] = {"classes": props, "choices": choices}
     rows.append(("table3/rank1_best_fraction", round(100 * sum(rank_hits) / len(rank_hits), 1),
                  "how often the heuristic's first choice gives the best speedup"))
-    common.save_result("table3_heuristic", payload)
+    common.save_result("table3_heuristic", payload, metrics={
+        "rank1_best_fraction": sum(rank_hits) / len(rank_hits)
+                               if rank_hits else 0.0,
+    }, gated={"rank1_best_fraction": "higher"})
     return rows
 
 

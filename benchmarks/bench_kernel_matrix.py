@@ -45,7 +45,10 @@ def run() -> list[tuple]:
         }
     payload["valid_fraction"] = valid / max(total, 1)
     tele = payload["runner"] = runner.telemetry()
-    common.save_result("fig4_kernel_matrix", payload)
+    common.save_result("fig4_kernel_matrix", payload, metrics={
+        "valid_fraction": payload["valid_fraction"],
+        "unique_evaluations": tele["measurements"],
+    }, gated={"valid_fraction": "higher"})
     rows.append(("fig4/valid_fraction", round(100 * valid / max(total, 1), 1),
                  f"{valid}/{total} transfers produced valid code"))
     rows.append(("fig4/unique_evaluations", int(tele["measurements"]),

@@ -143,6 +143,14 @@ def run(preset: str = "smoke") -> list[tuple]:
         "disabled_summary": _virtual_outcome(off_sum),
         "enabled_summary": _virtual_outcome(on_sum),
         "report_latency": rep["latency"],
+        "pass": bool(overhead_ok and same and mismatches == 0 and p95_ok),
+    }, metrics={
+        "overhead_pct": overhead_pct,
+        "trace_report_p95_err": p95_err,
+        "schedule_mismatches": mismatches,
+    }, gated={
+        "trace_report_p95_err": "lower",
+        "schedule_mismatches": "lower",
     })
     return rows
 

@@ -219,6 +219,18 @@ def run(preset: str = "smoke") -> list[tuple]:
             "paged": paged,
             "throughput_ratio": ratio,
             "equivalence": equiv,
+            "pass": bool(ratio >= 2.0 and p95_p <= p95_s
+                         and paged["padding_waste_frac"] == 0.0
+                         and equiv_bad == 0 and mismatches == 0),
+        }, metrics={
+            "throughput_ratio": ratio,
+            "paged_p95_ticks": paged["latency_ticks"]["p95"],
+            "equivalence_mismatches": equiv_bad,
+            "schedule_mismatches": mismatches,
+        }, gated={
+            "throughput_ratio": "higher",
+            "paged_p95_ticks": "lower",
+            "equivalence_mismatches": "lower",
         })
         return rows
     finally:

@@ -51,7 +51,11 @@ def run() -> list[tuple]:
     rows.append(("fig8/context_regressions", regressions,
                  f"archs where the mixed pool regressed in context "
                  f"(paper: 7 of 11 standalone-picked regress)"))
-    common.save_result("fig8_pool", payload)
+    mixed = [v["ctx_mixed_speedup"] for v in payload.values()]
+    common.save_result("fig8_pool", payload, metrics={
+        "mean_ctx_mixed_speedup": sum(mixed) / len(mixed) if mixed else 0.0,
+        "context_regressions": regressions,
+    }, gated={"mean_ctx_mixed_speedup": "higher"})
     return rows
 
 

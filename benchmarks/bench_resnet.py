@@ -66,7 +66,11 @@ def run() -> list[tuple]:
         "ansor_match_ratio": (match_t / tt.search_time_s) if match_t else None,
         "max_speedup_18": res18.speedup,
         "covered": n_valid, "kernels": len(tt.kernels), "invalid": n_inval,
-    })
+    }, metrics={
+        "tt_speedup": tt.speedup,
+        "search_time_s": tt.search_time_s,
+        "covered": n_valid,
+    }, gated={"tt_speedup": "higher", "search_time_s": "lower"})
     return rows
 
 

@@ -203,6 +203,14 @@ def run(preset: str = "smoke") -> list[tuple]:
             "trials": p["trials"],
             "steady_state": steady,
             "live_upgrade": live,
+            "pass": bool(reduction_ok and live_ok),
+        }, metrics={
+            "lookup_reduction": steady["reduction"],
+            "plan_lookups_per_token": steady["plan_lookups_per_token"],
+            "schedule_mismatches": steady["schedule_mismatches"],
+        }, gated={
+            "lookup_reduction": "higher",
+            "plan_lookups_per_token": "lower",
         })
         return rows
     finally:

@@ -97,7 +97,10 @@ def run() -> list[tuple]:
         "verify_top_k": VERIFY_TOP_K,
         "backends": results,
         "cached_eval_reduction": cached_reduction,
-    })
+        "pass": bool(cached_reduction >= 2.0),
+    }, metrics={
+        "cached_eval_reduction": cached_reduction,
+    }, gated={"cached_eval_reduction": "higher"})
     return rows
 
 

@@ -49,7 +49,11 @@ def run() -> list[tuple]:
                 f"search={tt.search_time_s:.0f}s",
             ))
         payload[arch] = results
-    common.save_result("fig7_seqlen", payload)
+    speeds = [s for arch in payload.values() for s in arch.values()]
+    common.save_result("fig7_seqlen", payload, metrics={
+        "mean_speedup": sum(speeds) / len(speeds) if speeds else 0.0,
+        "min_speedup": min(speeds) if speeds else 0.0,
+    }, gated={"mean_speedup": "higher"})
     return rows
 
 

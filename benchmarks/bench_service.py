@@ -112,6 +112,16 @@ def run(preset: str = "smoke") -> list[tuple]:
             "offline_search_s": offline.search_time_s,
             "stats": stats,
             "registry": registry.stats(),
+            "pass": bool(improvement > 1 and hit_rates[-1] > hit_rates[0]
+                         and stats["upgrades"] > 0 and mismatches == 0),
+        }, metrics={
+            "stream_improvement": improvement,
+            "offline_mismatches": mismatches,
+            "final_exact_hit_rate": hit_rates[-1],
+            "search_seconds": stats["search_seconds_spent"],
+        }, gated={
+            "stream_improvement": "higher",
+            "offline_mismatches": "lower",
         })
         return rows
     finally:

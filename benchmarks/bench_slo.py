@@ -1,0 +1,339 @@
+"""Closed-loop observability benchmark: SLO burn-down under tuning priority.
+
+One seeded request stream is served twice against identical copies of a
+donor-seeded schedule registry, with a latency SLO attached and background
+transfer-tuning racing to bring the fleet into compliance:
+
+1. **demand** — the PR-6 ordering: tune whatever arrives most (decode
+   first, then the hottest prefill buckets by arrival count);
+2. **advisor** — the closed-loop ordering: every executed workload ranked
+   by observed critical-path seconds x remaining speedup headroom
+   (:class:`~repro.fleet.TuningAdvisor`), fed to
+   :meth:`~repro.service.TuningService.prefetch` as queue priority.
+
+The serving scenario is the speculative paged fleet from PR 9 — and that
+choice is the point.  The demand heuristic predates speculation: it can
+only name the cells it was written for (the batched decode step and the
+prefill buckets), so it spends its whole priority budget on workloads a
+speculating fleet barely executes, while the cells that actually carry the
+latency — ``verify`` and ``draft_decode``, whose batched flash-attention
+kernels hold nearly all the donor headroom at this geometry — wait at the
+back of the queue at priority zero.  The advisor never names cells at all:
+it reads the replicas' live cell counters, so whatever cells the engine of
+the day executes are exactly the ones it ranks.  Telemetry-driven priority
+generalizes; hand-listed hot paths do not.
+
+Gates (the PR's acceptance criteria):
+
+* **profiler fidelity** — the critical-path profiler's per-request latency
+  percentiles, rebuilt offline from the trace, reproduce
+  ``FleetMetrics.summary()``'s p50/p95 *exactly* (same intervals, same
+  :func:`~repro.obs.percentile`), with 100% of replica busy-time attributed
+  to kernel workloads;
+* **priority win** — the advisor arm reaches SLO compliance (the last
+  burn-rate alert clears, never to return) spending at most
+  ``advantage`` x the demand arm's virtual tuning seconds, with zero
+  served-token mismatches between the arms (tuning order must never change
+  *what* is served, only how fast it gets fast);
+* **ledger truth** — after the advisor fleet fully drains its tuning
+  queues, the speedup ledger's realized speedup over the reference
+  replica's plan equals an offline
+  :func:`~repro.core.transfer.transfer_tune` run against the same donor
+  registry (same donors, mode, seed), and its realized fraction is 1.0 —
+  the live metric agrees with the paper's offline one.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import shutil
+import tempfile
+
+import jax
+
+from benchmarks import common
+from repro.configs import get_arch, reduced
+from repro.core.runner import AnalyticalRunner, CachedRunner
+from repro.core.transfer import transfer_tune
+from repro.core.tuner import tune_arch_registry
+from repro.fleet import ServingFleet, TrafficGenerator
+from repro.models import build_model
+from repro.obs import SLO, Tracer, profiler, report
+from repro.obs.export import _records
+from repro.serving import make_self_draft
+from repro.service import ScheduleRegistry
+
+#: The SLO threshold sits in the dead zone between the untuned and the
+#: fully-transferred latency distributions (measured endpoints at this
+#: geometry: untuned 51-62 ticks, tuned 39-48 ticks), so the run *starts*
+#: in violation and tuning is what brings it into compliance — the race the
+#: two orderings compete on.  Geometry notes: ``decode_batch`` 32 is where
+#: the donor pool's flash-attention headroom peaks (burst speedup 1.29 vs
+#: 1.10 at batch 8 — the lm_head matmul amortizes away); utilisation is
+#: kept low (~20%) so latency is deterministic service time, not queueing
+#: noise; long generations (~28 draft/verify bursts per request) integrate
+#: the per-burst saving into a ~10-tick latency gap.
+PRESETS = {
+    "smoke": {"arch": "minitron-4b", "donors": ["internvl2-26b"],
+              "trials": 256, "n_layers": 8, "keep_layers": 1, "damp": 0.01,
+              "spec_k": 4, "decode_batch": 32, "page_size": 4, "chunk": 16,
+              "admit_cap": 48,
+              "max_len": 160, "requests": 32, "queue_cap": 64,
+              "arrival_rate": 0.12, "short_lens": (3, 8),
+              "long_lens": (9, 14), "long_frac": 0.25,
+              "new_tokens": (120, 128),
+              "objective": 0.75, "threshold_ticks": 49.5,
+              "slo_window_ticks": 8.0, "slow_windows": 4,
+              "drain_jobs": 1, "drain_every": 4, "seed": 0,
+              "advantage": 0.75},
+    "full": {"arch": "minitron-4b", "donors": ["internvl2-26b",
+                                               "starcoder2-7b"],
+             "trials": 768, "n_layers": 8, "keep_layers": 1, "damp": 0.01,
+             "spec_k": 4, "decode_batch": 32, "page_size": 4, "chunk": 16,
+             "admit_cap": 48,
+             "max_len": 160, "requests": 48, "queue_cap": 64,
+             "arrival_rate": 0.12, "short_lens": (3, 8),
+             "long_lens": (9, 14), "long_frac": 0.25,
+             "new_tokens": (120, 128),
+             "objective": 0.75, "threshold_ticks": 49.5,
+             "slo_window_ticks": 8.0, "slow_windows": 4,
+             "drain_jobs": 1, "drain_every": 4, "seed": 0,
+             "advantage": 0.75},
+}
+
+
+def _slos(p: dict):
+    """The latency objective, thresholds scaled by the fleet's tick."""
+    return lambda tick_s: [SLO("p95_latency", "latency",
+                               objective=p["objective"],
+                               threshold_s=p["threshold_ticks"] * tick_s,
+                               slow_windows=p["slow_windows"])]
+
+
+def _make_fleet(p: dict, base: str, scratch: str, name: str, *,
+                prefetch, tracer, model, params, cfg,
+                draft, draft_params) -> ServingFleet:
+    root = os.path.join(scratch, name)
+    shutil.copytree(base, root)
+    fleet = ServingFleet(
+        cfg, model, params, replicas=1, engine="paged",
+        decode_batch=p["decode_batch"], page_size=p["page_size"],
+        pool_pages=p["decode_batch"] * p["max_len"] // p["page_size"] + 1,
+        chunk=p["chunk"], admit_cap=p["admit_cap"], max_len=p["max_len"],
+        speculative=True, draft_model=draft, draft_params=draft_params,
+        spec_k=p["spec_k"],
+        registry=ScheduleRegistry(root),
+        policy="least_loaded", queue_cap=p["queue_cap"],
+        prefetch=prefetch, donors=list(p["donors"]),
+        drain_jobs=p["drain_jobs"], drain_every=p["drain_every"],
+        seed=p["seed"], tracer=tracer, slos=_slos(p))
+    fleet.set_slo_window(p["slo_window_ticks"] * fleet.tick_s)
+    return fleet
+
+
+def _trace(p: dict, cfg, tick_s: float) -> list:
+    gen = TrafficGenerator(seed=p["seed"], vocab_size=cfg.vocab_size,
+                           arrival_rate=p["arrival_rate"], tick_s=tick_s,
+                           short_lens=tuple(p["short_lens"]),
+                           long_lens=tuple(p["long_lens"]),
+                           long_frac=p["long_frac"],
+                           new_tokens=tuple(p["new_tokens"]),
+                           prompt_cap=p["chunk"])
+    return gen.trace(p["requests"])
+
+
+def _run_arm(p: dict, base: str, scratch: str, name: str, *, prefetch,
+             model, params, cfg, draft, draft_params) -> dict:
+    """Serve one arm; returns summary + profiler/tuning/token evidence."""
+    tracer = Tracer()
+    fleet = _make_fleet(p, base, scratch, name, prefetch=prefetch,
+                        tracer=tracer, model=model, params=params, cfg=cfg,
+                        draft=draft, draft_params=draft_params)
+    reqs = _trace(p, cfg, fleet.tick_s)
+    try:
+        summary = fleet.serve(reqs)
+        records = _records(tracer)
+        cp = profiler.critical_path(records)
+        jobs = report.tuning_jobs(records)
+
+        # Virtual tuning seconds spent up to SLO compliance (the instant
+        # the last alert cleared for good; 0 -> never alerted).
+        slo = summary["slo"]["p95_latency"]
+        t_comply = slo["last_alert_end_s"]
+        spent = sum(j["duration_s"] for j in jobs
+                    if j["t0"] <= t_comply + 1e-12)
+        return {
+            "fleet": fleet,  # advisor arm keeps serving for the ledger gate
+            "summary": summary,
+            "critical_path": cp,
+            "slo": slo,
+            # Ending compliant is what counts; never having alerted at all
+            # (possible for the advisor arm: tuning lands before the first
+            # breaching finisher) is the ideal outcome, not a failure.
+            "compliant": (slo["evaluations"] > 0
+                          and not slo["alerting_now"]),
+            "tuning_s_to_comply": spent,
+            "tuning_s_total": sum(j["duration_s"] for j in jobs),
+            "jobs": len(jobs),
+            "tokens": {r.uid: list(r.generated or []) for r in reqs
+                       if r.finished_s is not None},
+        }
+    except BaseException:
+        fleet.close()
+        raise
+
+
+def _clears(arm: dict) -> str:
+    """Row annotation: when the arm's alerts cleared for good."""
+    if arm["slo"]["alerting_windows"] == 0:
+        return "never alerted (tuned before the first breaching finisher)"
+    return f"alerts cleared at t={arm['slo']['last_alert_end_s']:.4g}"
+
+
+def _cp_matches(arm: dict) -> bool:
+    """Gate a: trace-rebuilt percentiles == fleet metrics, bit-exact."""
+    cp, s = arm["critical_path"], arm["summary"]
+    return (cp["latency_s"]["p50"] == s["latency_s"]["p50"]
+            and cp["latency_s"]["p95"] == s["latency_s"]["p95"]
+            and cp["attributed_frac"] == 1.0)
+
+
+def run(preset: str = "smoke") -> list[tuple]:
+    p = PRESETS[preset]
+    cfg = dataclasses.replace(reduced(get_arch(p["arch"])),
+                              n_layers=p["n_layers"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg, dparams, params = make_self_draft(cfg, params,
+                                            keep_layers=p["keep_layers"],
+                                            damp=p["damp"])
+    draft = build_model(dcfg)
+
+    scratch = tempfile.mkdtemp(prefix="slo-bench-")
+    base = os.path.join(scratch, "base-registry")
+    advisor = demand = None
+    try:
+        registry = ScheduleRegistry(base)
+        for donor in p["donors"]:
+            tune_arch_registry(registry, donor, common.SHAPE, dp=common.DP,
+                               tp=common.TP, total_trials=p["trials"],
+                               seed=common.SEED)
+        donor_db = registry.snapshot().db(None)  # frozen pre-serve pool
+
+        demand = _run_arm(p, base, scratch, "demand", prefetch=True,
+                          model=model, params=params, cfg=cfg,
+                          draft=draft, draft_params=dparams)
+        advisor = _run_arm(p, base, scratch, "advisor", prefetch="advisor",
+                           model=model, params=params, cfg=cfg,
+                           draft=draft, draft_params=dparams)
+
+        # Gate a: profiler fidelity, both arms.
+        cp_ok = _cp_matches(demand) and _cp_matches(advisor)
+
+        # Gate b: the advisor reaches compliance on a fraction of the
+        # tuning spend, serving byte-identical tokens.
+        mismatches = sum(
+            1 for uid, toks in demand["tokens"].items()
+            if advisor["tokens"].get(uid) != toks)
+        mismatches += sum(1 for uid in advisor["tokens"]
+                          if uid not in demand["tokens"])
+        ratio = (advisor["tuning_s_to_comply"]
+                 / max(demand["tuning_s_to_comply"], 1e-12))
+        # The demand arm must actually have alerted — otherwise the
+        # threshold had no teeth and the race was vacuous.
+        race_ok = (demand["compliant"] and advisor["compliant"]
+                   and demand["slo"]["alerting_windows"] > 0
+                   and ratio <= p["advantage"] and mismatches == 0)
+
+        # Gate c: drain the advisor fleet's tuning queues to exhaustion;
+        # the live ledger must then agree with the offline transfer number
+        # for the same donors / mode / seed over the same workloads.
+        fleet = advisor["fleet"]
+        for svc in fleet.services.values():
+            svc.drain()
+        final = fleet.summary()  # re-syncs plans, re-prices the ledger
+        ref = fleet.replicas[0]
+        uses = [u for cell in sorted(ref.cell_counts)
+                for u in ref.cell_uses(cell)
+                if (u.instance.workload_key(), ref.target) in
+                fleet.ledger.entries]
+        svc = fleet.services[ref.target]
+        led = fleet.ledger.speedup_for(uses, ref.target)
+        offline = transfer_tune(
+            uses, donor_db, model_id=svc.model_id,
+            donors=list(p["donors"]), mode="strict", seed=p["seed"],
+            runner=CachedRunner(AnalyticalRunner(ref.target)),
+            target=ref.target)
+        led_err = abs(led["realized_speedup"] - offline.speedup) / \
+            offline.speedup
+        ledger_ok = (led_err <= 1e-9 and led["realized_fraction"] == 1.0
+                     and not led["missing"])
+
+        ok = cp_ok and race_ok and ledger_ok
+        rows = [
+            ("slo/critical_path_exact", int(cp_ok),
+             f"trace p50/p95 == FleetMetrics, 100% attributed: "
+             f"{'PASS' if cp_ok else 'FAIL'}"),
+            ("slo/demand_tuning_s_to_comply",
+             round(demand["tuning_s_to_comply"], 2),
+             f"{_clears(demand)} ({demand['jobs']} jobs, "
+             f"{demand['tuning_s_total']:.1f}s total)"),
+            ("slo/advisor_tuning_s_to_comply",
+             round(advisor["tuning_s_to_comply"], 2),
+             f"{_clears(advisor)} ({advisor['jobs']} jobs, "
+             f"{advisor['tuning_s_total']:.1f}s total)"),
+            ("slo/advisor_vs_demand_ratio", round(ratio, 3),
+             f"<= {p['advantage']} with {mismatches} token mismatches: "
+             f"{'PASS' if race_ok else 'FAIL'}"),
+            ("slo/ledger_realized_speedup",
+             round(led["realized_speedup"], 4),
+             f"offline transfer_tune={offline.speedup:.4f} "
+             f"(err={led_err:.2g}), fraction="
+             f"{led['realized_fraction']:.3f}: "
+             f"{'PASS' if ledger_ok else 'FAIL'}"),
+        ]
+        common.save_result("slo", {
+            "preset": preset,
+            "arch": p["arch"],
+            "donors": p["donors"],
+            "slo": {"objective": p["objective"],
+                    "threshold_ticks": p["threshold_ticks"],
+                    "window_ticks": p["slo_window_ticks"]},
+            "demand": {k: v for k, v in demand.items()
+                       if k not in ("fleet", "tokens")},
+            "advisor": {k: v for k, v in advisor.items()
+                        if k not in ("fleet", "tokens")},
+            "token_mismatches": mismatches,
+            "tuning_ratio": ratio,
+            "ledger": led,
+            "offline_speedup": offline.speedup,
+            "ledger_err": led_err,
+            "final_ledger": final["speedup_ledger"],
+            "pass": ok,
+        }, metrics={
+            "tuning_ratio": ratio,
+            "advisor_tuning_s_to_comply": advisor["tuning_s_to_comply"],
+            "token_mismatches": mismatches,
+            "ledger_err": led_err,
+            "ledger_realized_speedup": led["realized_speedup"],
+        }, gated={
+            "tuning_ratio": "lower",
+            "token_mismatches": "lower",
+            "ledger_err": "lower",
+        })
+        return rows
+    finally:
+        for arm in (demand, advisor):
+            if arm is not None and "fleet" in arm:
+                arm["fleet"].close()
+        shutil.rmtree(scratch, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    args = ap.parse_args()
+    common.emit(run(args.preset),
+                "Closed-loop observability — SLO burn-down, tuning priority, "
+                "speedup ledger")

@@ -259,6 +259,16 @@ def run(preset: str = "smoke") -> list[tuple]:
             "throughput_ratio": ratio,
             "equivalence": equiv,
             "transfer_race": race,
+            "pass": bool(ratio >= 1.5 and equiv["token_mismatches"] == 0
+                         and race_pass),
+        }, metrics={
+            "throughput_ratio": ratio,
+            "token_mismatches": equiv["token_mismatches"],
+            "spec_throughput_tok_per_s": spec["throughput_tok_per_s"],
+            "transfer_search_time_s": race["transfer_search_time_s"],
+        }, gated={
+            "throughput_ratio": "higher",
+            "token_mismatches": "lower",
         })
         return rows
     finally:

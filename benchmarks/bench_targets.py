@@ -134,6 +134,17 @@ def run(preset: str = "smoke") -> list[tuple]:
             "search_time_s": x.search_time_s,
         },
         "cross_target_leaks": leaks,
+        "pass": bool(edge["ratio"] > srv["ratio"]
+                     and x.invalid_transfers > 0 and leaks == 0),
+    }, metrics={
+        "server_ratio": srv["ratio"],
+        "edge_ratio": edge["ratio"],
+        "edge_exacerbation": exacerbation,
+        "cross_target_leaks": leaks,
+    }, gated={
+        "server_ratio": "higher",
+        "edge_ratio": "higher",
+        "cross_target_leaks": "lower",
     })
     return rows
 

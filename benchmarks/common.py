@@ -109,7 +109,43 @@ def emit(rows: list[tuple], header: str | None = None) -> None:
         print(f"{name},{us},{derived}")
 
 
-def save_result(name: str, payload: dict) -> None:
+def save_result(name: str, payload: dict, *,
+                metrics: "dict[str, float] | None" = None,
+                gated: "dict[str, str] | None" = None) -> None:
+    """Write ``benchmarks/results/<name>.json`` in the common envelope.
+
+    Every benchmark artifact shares one schema so CI uploads are stable
+    (``BENCH_<name>.json``) and :mod:`benchmarks.compare` can diff any two
+    runs without per-bench knowledge:
+
+    * ``name`` / ``preset`` / ``pass`` / ``timestamp`` — identity and the
+      bench's own verdict (``preset``/``pass`` lifted from the payload);
+    * ``metrics`` — flat ``name -> float`` of the numbers worth tracking
+      across runs;
+    * ``gated`` — ``metric -> "lower" | "higher"`` (which direction is
+      *better*): the subset of ``metrics`` whose >10% regression fails CI;
+    * ``detail`` — the full bench-specific payload, unchanged.
+
+    Callers that predate the envelope pass only ``payload``; they get
+    identity + detail with empty metrics, still schema-valid.
+    """
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    metrics = dict(metrics or {})
+    gated = dict(gated or {})
+    bad = set(gated) - set(metrics)
+    if bad:
+        raise ValueError(f"gated metrics missing from metrics: {sorted(bad)}")
+    bad_dir = {m: d for m, d in gated.items() if d not in ("lower", "higher")}
+    if bad_dir:
+        raise ValueError(f"gated direction must be lower|higher: {bad_dir}")
+    envelope = {
+        "name": name,
+        "preset": payload.get("preset"),
+        "pass": payload.get("pass"),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "metrics": {k: float(v) for k, v in sorted(metrics.items())},
+        "gated": {k: gated[k] for k in sorted(gated)},
+        "detail": payload,
+    }
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump(envelope, f, indent=1)

@@ -1,0 +1,118 @@
+"""Diff two benchmark-artifact sets; fail on regression of gated metrics.
+
+Every benchmark writes ``benchmarks/results/<name>.json`` in the common
+envelope (:func:`benchmarks.common.save_result`): identity fields, a flat
+``metrics`` dict, and a ``gated`` map naming the metrics whose regression
+should fail CI together with which direction is *better* (``"lower"`` for
+latencies, ``"higher"`` for speedups).  This tool compares a baseline set
+against a candidate set without any per-bench knowledge:
+
+    python -m benchmarks.compare baseline_dir/ candidate_dir/
+    python -m benchmarks.compare baseline_dir/ candidate_dir/ --tolerance 0.05
+
+A gated metric regresses when it moves more than ``--tolerance`` (default
+10%) in the *worse* direction; a bench whose ``pass`` flips true -> false
+always fails.  Artifacts present on only one side are reported but do not
+fail the run (a new bench has no baseline yet; a retired one has no
+candidate).  Non-envelope JSON files (e.g. the cached tuning results under
+``results/tuning/``) are ignored.  Exit status: 0 clean, 1 regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_artifacts(dirname: str) -> dict:
+    """``name -> envelope`` for every envelope-shaped JSON in ``dirname``."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if (isinstance(d, dict) and isinstance(d.get("metrics"), dict)
+                and "name" in d):
+            out[d["name"]] = d
+    return out
+
+
+def compare_one(base: dict, cand: dict, tolerance: float) -> list[dict]:
+    """Regression rows for one benchmark (empty list: clean)."""
+    bad = []
+    if base.get("pass") is True and cand.get("pass") is False:
+        bad.append({"bench": cand["name"], "metric": "pass",
+                    "baseline": True, "candidate": False,
+                    "change": "verdict flipped to FAIL"})
+    for metric, direction in sorted(cand.get("gated", {}).items()):
+        b = base.get("metrics", {}).get(metric)
+        c = cand.get("metrics", {}).get(metric)
+        if b is None or c is None:
+            continue  # metric added/removed: nothing to regress against
+        if b == 0:
+            worse = (c > 0) if direction == "lower" else (c < 0)
+            rel = float("inf") if worse else 0.0
+        else:
+            rel = (c - b) / abs(b)
+            if direction == "higher":
+                rel = -rel  # normalize: positive rel == worse
+        if rel > tolerance:
+            bad.append({"bench": cand["name"], "metric": metric,
+                        "baseline": b, "candidate": c,
+                        "change": f"{rel:+.1%} worse ({direction} is better)"})
+    return bad
+
+
+def compare_dirs(baseline_dir: str, candidate_dir: str,
+                 tolerance: float = 0.10) -> dict:
+    """Full comparison: regressions plus coverage notes, JSON-ready."""
+    base = load_artifacts(baseline_dir)
+    cand = load_artifacts(candidate_dir)
+    regressions = []
+    for name in sorted(set(base) & set(cand)):
+        regressions.extend(compare_one(base[name], cand[name], tolerance))
+    return {
+        "tolerance": tolerance,
+        "compared": sorted(set(base) & set(cand)),
+        "baseline_only": sorted(set(base) - set(cand)),
+        "candidate_only": sorted(set(cand) - set(base)),
+        "regressions": regressions,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two benchmark-artifact directories; exit 1 on "
+                    ">tolerance regression of any gated metric")
+    ap.add_argument("baseline", help="directory of baseline artifacts")
+    ap.add_argument("candidate", help="directory of candidate artifacts")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression (default 0.10 = 10%%)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the comparison object as JSON")
+    args = ap.parse_args(argv)
+
+    result = compare_dirs(args.baseline, args.candidate, args.tolerance)
+    if args.json:
+        print(json.dumps(result, indent=1, sort_keys=True))
+    else:
+        print(f"compared {len(result['compared'])} benches "
+              f"(tolerance {args.tolerance:.0%})")
+        for name in result["baseline_only"]:
+            print(f"  note: {name} only in baseline")
+        for name in result["candidate_only"]:
+            print(f"  note: {name} only in candidate (no baseline yet)")
+        for r in result["regressions"]:
+            print(f"  REGRESSION {r['bench']}.{r['metric']}: "
+                  f"{r['baseline']} -> {r['candidate']}  ({r['change']})")
+        if not result["regressions"]:
+            print("  no regressions")
+    return 1 if result["regressions"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ def main() -> None:
         bench_runner_cache,
         bench_seqlen,
         bench_service,
+        bench_slo,
         bench_spec,
         bench_targets,
     )
@@ -52,6 +53,8 @@ def main() -> None:
         ("Elastic autoscaling fleet vs fixed sizes", bench_autoscale),
         ("Observability overhead + trace fidelity", bench_obs),
         ("Speculative draft-then-verify vs plain paged decode", bench_spec),
+        ("Closed-loop observability: SLO burn-down + tuning priority",
+         bench_slo),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     t0 = time.monotonic()

@@ -8,10 +8,13 @@ A request front-end over N :class:`~repro.serving.ServingEngine` replicas:
     acceptance.py .. decayed per-class speculative acceptance estimates
     metrics.py ..... latency percentiles, windowed telemetry, shed accounting
     autoscale.py ... hysteresis autoscaler over the windowed telemetry
+    advisor.py ..... telemetry-driven tuning priority (critical-path seconds
+                     x speedup headroom), replacing demand-count ordering
     fleet.py ....... replicas + shared-registry propagation + the serve loop
                      + elastic lifecycle (warm-join / drain-retire)
 """
 from repro.fleet.acceptance import AcceptanceTracker
+from repro.fleet.advisor import RankedWorkload, TuningAdvisor
 from repro.fleet.autoscale import Autoscaler, ScaleDecision
 from repro.fleet.demand import DemandTracker
 from repro.fleet.fleet import PagedReplica, Replica, ServingFleet
@@ -52,12 +55,14 @@ __all__ = [
     "PagedReplica",
     "PlanAware",
     "QueueFull",
+    "RankedWorkload",
     "Replica",
     "RequestRouter",
     "RoundRobin",
     "ScaleDecision",
     "ServingFleet",
     "TrafficGenerator",
+    "TuningAdvisor",
     "VariableRateTraffic",
     "load_trace",
     "make_policy",

@@ -124,6 +124,11 @@ class Autoscaler:
 
     # -- pressure classification ----------------------------------------------
     def _up_reason(self, w: dict) -> str | None:
+        # SLO burn-rate alerts (windows carry them when the fleet runs an
+        # SLOMonitor) outrank the raw-signal thresholds: a burning error
+        # budget is the user-facing definition of "falling behind".
+        if w.get("slo_alerts", 0) > 0:
+            return f"slo burn-rate alert on {w['slo_alerts']} objective(s)"
         if w["queue_depth_mean"] > self.queue_high:
             return f"queue_depth_mean {w['queue_depth_mean']:.2f} > {self.queue_high}"
         if w["shed_rate"] > self.shed_high:
@@ -138,7 +143,8 @@ class Autoscaler:
     def _down_ok(self, w: dict) -> bool:
         return (w["utilization_mean"] < self.util_low
                 and w["queue_depth_mean"] < self.queue_low
-                and w["shed"] == 0)
+                and w["shed"] == 0
+                and w.get("slo_alerts", 0) == 0)
 
     # -- the decision ----------------------------------------------------------
     def observe(self, window: dict, *, now: float, replicas: int

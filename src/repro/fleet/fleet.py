@@ -53,12 +53,14 @@ from repro.core.runner import AnalyticalRunner, CachedRunner
 from repro.core.schedule import ScheduleInvalid
 from repro.core.workload import KernelInstance, KernelUse
 from repro.fleet.acceptance import AcceptanceTracker
+from repro.fleet.advisor import TuningAdvisor
 from repro.fleet.demand import DemandTracker
 from repro.fleet.metrics import FleetMetrics
 from repro.fleet.router import TIER_SCORE, QueueFull, RequestRouter
 from repro.fleet.traffic import FleetRequest
 from repro.kernels.ops import ScheduleProvider
-from repro.obs import NULL_TRACER, MetricsRegistry
+from repro.obs import (NULL_TRACER, MetricsRegistry, SLOMonitor,
+                       SpeedupLedger, default_slos)
 from repro.serving import PagedServingEngine, ServingEngine
 from repro.serving.speculative import expected_committed_tokens
 from repro.serving.speculative import spec_gain as _spec_gain
@@ -110,6 +112,12 @@ class Replica:
         self._caches_gen: int | None = None
         self._cost_cache: dict[Any, float] = {}
         self._score_cache: dict[int, tuple[float, float]] = {}
+        self._workload_cache: dict[str, list] = {}
+        #: Observed cell executions (``prefill:<bucket>``, ``decode``, the
+        #: paged spec cells ...) — the live critical-path signal the
+        #: profiler, ledger, and TuningAdvisor read without a tracer.
+        self.cell_counts: dict[str, float] = {}
+        self._cell_emitted: dict[str, int] = {}  # cell -> plan generation
 
     def _serving_uses(self) -> list[KernelUse]:
         """Kernels of this engine's batched decode cell (subclass hook)."""
@@ -172,6 +180,7 @@ class Replica:
         if gen != self._caches_gen:
             self._cost_cache.clear()
             self._score_cache.clear()
+            self._workload_cache.clear()
             self._caches_gen = gen
 
     def _uses_cost(self, uses: Sequence[KernelUse], cache_key: Any) -> float:
@@ -212,6 +221,60 @@ class Replica:
         return sum(u.use_count * self._runner.seconds(u.instance, None)
                    for u in self._decode_uses)
 
+    # -- cell accounting (critical-path attribution) ---------------------------
+    def cell_uses(self, cell: str) -> list[KernelUse]:
+        """Kernel uses of one cost cell, by its counter id."""
+        if cell == "decode":
+            return self._decode_uses
+        kind, _, arg = cell.partition(":")
+        if kind == "prefill":
+            return self.prefill_uses(int(arg))
+        raise KeyError(f"unknown cell {cell!r}")
+
+    def use_resolution(self, inst: KernelInstance) -> Resolution:
+        """Public view of the plan's resolution for one kernel instance."""
+        return self._resolution(inst)
+
+    def use_seconds(self, inst: KernelInstance, schedule) -> float:
+        """Per-call seconds of ``inst`` under ``schedule`` (None/invalid ->
+        untuned) — the same pricing ``_uses_cost`` charges the clock."""
+        if schedule is not None:
+            try:
+                return self._runner.seconds(inst, schedule, mode=self._mode)
+            except ScheduleInvalid:
+                pass
+        return self._runner.seconds(inst, None)
+
+    def cell_workload_seconds(self, cell: str) -> "list[tuple[KernelUse, float]]":
+        """Per-execution seconds of each workload in ``cell`` under the
+        current plan (``use_count`` folded in, so the pairs sum to exactly
+        what one execution charges the virtual clock).  Memoized per plan
+        generation alongside the cost caches."""
+        self._fresh_caches()
+        rows = self._workload_cache.get(cell)
+        if rows is None:
+            rows = self._workload_cache[cell] = [
+                (u, u.use_count * self.use_seconds(
+                    u.instance, self._resolution(u.instance).schedule))
+                for u in self.cell_uses(cell)]
+        return rows
+
+    def _note_cell(self, cell: str, n: float, now: float) -> None:
+        """Count ``n`` executions of ``cell`` at the instant its cost is
+        charged.  When tracing, (re-)emit the cell's workload mapping once
+        per plan generation — the ``cell_workloads`` events the offline
+        profiler joins replica spans against."""
+        self.cell_counts[cell] = self.cell_counts.get(cell, 0) + n
+        if self.tracer.enabled:
+            gen = self._generation()
+            if self._cell_emitted.get(cell) != gen:
+                self._cell_emitted[cell] = gen
+                self.tracer.event(
+                    "cell_workloads", self.track, t=now, cell=cell,
+                    generation=gen,
+                    workloads=[[u.instance.workload_key(), s]
+                               for u, s in self.cell_workload_seconds(cell)])
+
     # -- lifecycle -------------------------------------------------------------
     def admit(self, req: FleetRequest, now: float):
         """Admit into the engine and charge the prefill to the clock."""
@@ -222,6 +285,7 @@ class Replica:
         req.exact_share_at_admit = self.prefill_exact_share(req.bucket)
         self.requests_admitted += 1
         t0 = max(self.time, now)
+        self._note_cell(f"prefill:{req.bucket}", 1, t0)
         self.time = t0 + self.prefill_cost(req.bucket)
         # The slot engine prefills synchronously: the first token exists
         # the instant the prefill's virtual time elapses.
@@ -243,6 +307,7 @@ class Replica:
         for er in finished:
             fr = self._fleet_reqs.pop(er.uid)
             fr.tokens = len(er.generated)
+            fr.generated = list(er.generated)
             out.append(fr)
         if self.tracer.enabled:
             self.tracer.add_span("decode_step", self.track, self._step_t0,
@@ -251,6 +316,7 @@ class Replica:
         return out
 
     def start_step(self, now: float) -> None:
+        self._note_cell("decode", 1, now)
         self.time = now + self.decode_cost()
         self.busy, self.step_pending = True, True
         self._step_t0 = now
@@ -356,14 +422,27 @@ class PagedReplica(Replica):
         """Virtual seconds of one batched draft decode step."""
         return self._uses_cost(self.draft_decode_uses(), "draft_decode")
 
-    def draft_chunk_cost(self, c: int) -> float:
+    def draft_chunk_uses(self, c: int) -> list[KernelUse]:
         uses = self._draft_chunk_uses.get(c)
         if uses is None:
             uses = self._draft_chunk_uses[c] = extract_kernels(
                 self.engine.draft_model.cfg,
                 ShapeConfig(f"draft_chunk_{c}", c, 1, "chunk_prefill",
                             ctx_len=self.engine.max_ctx), dp=1, tp=1)
-        return self._uses_cost(uses, ("draft_chunk", c))
+        return uses
+
+    def draft_chunk_cost(self, c: int) -> float:
+        return self._uses_cost(self.draft_chunk_uses(c), ("draft_chunk", c))
+
+    def cell_uses(self, cell: str) -> list[KernelUse]:
+        if cell == "verify":
+            return self.verify_cell_uses()
+        if cell == "draft_decode":
+            return self.draft_decode_uses()
+        kind, _, arg = cell.partition(":")
+        if kind == "draft_sync":
+            return self.draft_chunk_uses(int(arg))
+        return super().cell_uses(cell)
 
     def spec_gain(self, alpha: float) -> float:
         """Projected speculate-vs-plain throughput ratio at acceptance rate
@@ -391,9 +470,7 @@ class PagedReplica(Replica):
         spec_tok = burst / expected_committed_tokens(k, alpha)
         return min(self.decode_cost(), spec_tok)
 
-    def expected_step_s(self) -> float:
-        """Virtual cost of the engine's next iteration under the plan."""
-        work = self.engine.planned_work()
+    def _work_cost(self, work: dict) -> float:
         cost = sum(self.prefill_cost(c) for c in work["chunk_lens"])
         cost += sum(self.draft_chunk_cost(c)
                     for c in work.get("draft_sync_lens", ()))
@@ -405,6 +482,10 @@ class PagedReplica(Replica):
         # nothing runnable this instant (e.g. pure preemption step): charge
         # a decode step so the clock always advances
         return cost if cost > 0.0 else self.decode_cost()
+
+    def expected_step_s(self) -> float:
+        """Virtual cost of the engine's next iteration under the plan."""
+        return self._work_cost(self.engine.planned_work())
 
     def admit(self, req: FleetRequest, now: float):
         """Enqueue into the engine — O(1), no clock charge, no busy flag:
@@ -458,6 +539,7 @@ class PagedReplica(Replica):
         for er in finished:
             fr = self._fleet_reqs.pop(er.uid)
             fr.tokens = len(er.generated)
+            fr.generated = list(er.generated)
             if fr.prefill_done_s is None:
                 fr.prefill_done_s = now
             out.append(fr)
@@ -509,7 +591,20 @@ class PagedReplica(Replica):
         return out
 
     def start_step(self, now: float) -> None:
-        self.time = now + self.expected_step_s()
+        # Count the iteration's cells at the instant their cost is charged
+        # (the scheduler is pure and no admissions land mid-step, so the
+        # preview here is exactly what complete_step will run and trace).
+        work = self.engine.planned_work()
+        for c in work["chunk_lens"]:
+            self._note_cell(f"prefill:{c}", 1, now)
+        for c in work.get("draft_sync_lens", ()):
+            self._note_cell(f"draft_sync:{c}", 1, now)
+        if work.get("spec_lanes"):
+            self._note_cell("draft_decode", work["draft_steps"], now)
+            self._note_cell("verify", 1, now)
+        if work["decode"]:
+            self._note_cell("decode", 1, now)
+        self.time = now + self._work_cost(work)
         self.busy, self.step_pending = True, True
         self._step_t0 = now
 
@@ -556,7 +651,7 @@ class ServingFleet:
                  admit_cap: int | None = None,
                  defrag_threshold: float | None = None,
                  registry=None, policy: str = "round_robin",
-                 queue_cap: int = 32, prefetch: bool = False,
+                 queue_cap: int = 32, prefetch: "bool | str" = False,
                  prefetch_buckets: int = 2,
                  targets: "Sequence[str] | str | None" = None,
                  donor_target: str | None = None,
@@ -568,9 +663,14 @@ class ServingFleet:
                  speculative: "bool | str" = False, draft_model=None,
                  draft_params=None, spec_k: int = 4,
                  acceptance: "AcceptanceTracker | None" = None,
-                 tracer=None, metrics: MetricsRegistry | None = None):
+                 tracer=None, metrics: MetricsRegistry | None = None,
+                 slos=None, slo_window_s: float | None = None,
+                 advisor: "TuningAdvisor | None" = None):
         if engine not in ("slot", "paged"):
             raise ValueError(f"unknown engine {engine!r}: 'slot' or 'paged'")
+        if prefetch not in (False, True, "advisor"):
+            raise ValueError(
+                f"prefetch must be False, True, or 'advisor', got {prefetch!r}")
         self.engine_kind = engine
         if replicas <= 0:
             raise ValueError("need at least one replica")
@@ -656,6 +756,32 @@ class ServingFleet:
         self.scale_events: list[dict] = []
         self._events = 0
         self._next_eval: float | None = None
+        # Closed-loop observability (DESIGN.md §12): the SLO monitor
+        # evaluates burn rates at its own window cadence inside serve()
+        # (alerts feed the autoscaler window), the ledger tracks realized
+        # vs attainable speedup on the tuning-drain cadence, and the
+        # advisor replaces demand-count prefetch ordering when
+        # ``prefetch="advisor"``.
+        if slos == "default":
+            slos = default_slos(self.tick_s)
+        elif callable(slos):  # tick-relative spec: thresholds need tick_s
+            slos = slos(self.tick_s)
+        self.slo_monitor = (SLOMonitor(
+            slos, self.metrics, window_s=slo_window_s or 4 * self.tick_s,
+            metrics=self.obs, tracer=self.tracer) if slos else None)
+        self._slo_next = (self.slo_monitor.window_s
+                          if self.slo_monitor is not None else None)
+        self.ledger = (SpeedupLedger(metrics=self.obs, tracer=self.tracer)
+                       if self._services else None)
+        self.advisor = advisor if advisor is not None else (
+            TuningAdvisor() if prefetch == "advisor" else None)
+        if self.tracer.enabled:
+            if self.slo_monitor is not None:
+                self.tracer.track(SLOMonitor.TRACK)
+            if self.ledger is not None:
+                self.tracer.track(SpeedupLedger.TRACK)
+            if self.advisor is not None:
+                self.tracer.track("advisor")
         if autoscaler is not None:
             self.attach_autoscaler(autoscaler)
 
@@ -673,6 +799,19 @@ class ServingFleet:
         if bind is not None:  # controller telemetry joins the fleet's sinks
             bind(self.tracer, self.obs)
 
+    def set_slo_window(self, window_s: float) -> None:
+        """Retime the SLO evaluation cadence (call before :meth:`serve`).
+
+        Same rationale as :meth:`attach_autoscaler`: callers size windows in
+        ticks of :attr:`tick_s`, which is only known post-construction.
+        """
+        if self.slo_monitor is None:
+            raise ValueError("fleet has no SLO monitor (pass slos=)")
+        if window_s <= 0:
+            raise ValueError("window_s must be positive")
+        self.slo_monitor.window_s = window_s
+        self._slo_next = self._now + window_s
+
     # -- replica construction --------------------------------------------------
     def _service_for(self, target: str):
         """The shared TuningService for ``target`` (created on first use)."""
@@ -686,6 +825,7 @@ class ServingFleet:
                 runner=CachedRunner(AnalyticalRunner(target)),
                 max_workers=0, probe_candidates=0, target=target,
                 metrics=self.obs, tracer=self.tracer,
+                clock=lambda: self._now,
                 **self._svc_kw)
         return svc
 
@@ -897,6 +1037,29 @@ class ServingFleet:
             self._prefetch_uses(self.replicas[0].prefill_uses(bucket),
                                 float(count))
 
+    def _prefetch_advised(self) -> None:
+        """Advisor-ranked prefetch (``prefetch="advisor"``): queue or
+        promote every un-exhausted executed workload at priority
+        critical-path-seconds x headroom, so the drain order follows
+        end-to-end impact rather than raw arrival counts."""
+        ranked = self.advisor.rank(self)
+        for rw in ranked:
+            svc = self._services.get(rw.target)
+            if svc is None or not svc.prefetch(rw.instance,
+                                               priority=rw.priority):
+                continue
+            key = rw.instance.workload_key()
+            if key not in self._prefetched_seen:
+                self._prefetched_seen.add(key)
+                self.prefetched.append(key)
+        if ranked and self.tracer.enabled:
+            top = ranked[0]
+            self.tracer.event(
+                "advise", "advisor", t=self._now, candidates=len(ranked),
+                top_key=top.instance.workload_key(),
+                top_priority=top.priority, top_critical_s=top.critical_s,
+                top_headroom=top.headroom)
+
     def _drain_services(self) -> None:
         for svc in self._services.values():
             svc.drain(max_jobs=self.drain_jobs)
@@ -967,6 +1130,7 @@ class ServingFleet:
             # Finished by the prefill itself (max_new_tokens=0 / prefill
             # EOS): completes when its prefill's virtual time elapses.
             req.tokens = len(engine_req.generated)
+            req.generated = list(engine_req.generated)
             self._complete(req, replica.time)
         return True
 
@@ -998,10 +1162,13 @@ class ServingFleet:
                     break
                 # Queued work, everything idle: dispatch at the current time.
             else:
-                # With an autoscaler, window boundaries are events too — the
-                # clock never jumps past an evaluation instant.
+                # With an autoscaler (or SLO monitor), window boundaries are
+                # events too — the clock never jumps past an evaluation
+                # instant.
                 if self._next_eval is not None:
                     next_times.append(self._next_eval)
+                if self._slo_next is not None:
+                    next_times.append(self._slo_next)
                 now = max(now, min(next_times))
             self._now = now
 
@@ -1026,12 +1193,27 @@ class ServingFleet:
                         and not r.engine.active:
                     self._finalize_retire(r, now)
 
-            # 3) background tuning in bursts: demand-ordered prefetch, then
-            #    a bounded drain (publishes coalesce -> bounded re-plans).
+            # 3) background tuning in bursts: prefetch ordering (advisor
+            #    priority or demand counts), then a bounded drain (publishes
+            #    coalesce -> bounded re-plans), then a ledger refresh so the
+            #    realized-speedup gauges move the instant publishes land.
             if self._services and self._events % self.drain_every == 0:
-                if self.prefetch:
+                if self.prefetch == "advisor":
+                    self._prefetch_advised()
+                elif self.prefetch:
                     self._prefetch_hot()
                 self._drain_services()
+                if self.ledger is not None:
+                    self.ledger.update(self.live_replicas(), now=now)
+
+            # 3a) SLO monitor: evaluate burn rates at every window boundary
+            #     crossed, *before* the autoscaler folds its window — an
+            #     alert raised at a shared boundary is scale-up pressure in
+            #     the same instant's decision.
+            if self._slo_next is not None:
+                while self._slo_next <= now + 1e-12:
+                    self.slo_monitor.evaluate(self._slo_next)
+                    self._slo_next += self.slo_monitor.window_s
 
             # 3b) autoscaler: fold the just-closed telemetry window into the
             #     controller and apply its decision *before* dispatch, so a
@@ -1040,6 +1222,8 @@ class ServingFleet:
                 while self._next_eval <= now + 1e-12:
                     t1 = self._next_eval
                     w = self.metrics.window(t1 - self.autoscaler.window_s, t1)
+                    w["slo_alerts"] = (len(self.slo_monitor.alerting())
+                                       if self.slo_monitor is not None else 0)
                     decision = self.autoscaler.observe(
                         w, now=t1, replicas=len(self.live_replicas()))
                     self._apply_decision(decision, t1)
@@ -1142,6 +1326,13 @@ class ServingFleet:
         out["final_exact_share"] = self._final_exact_share_synced()
         if self._services:
             out["tuning"] = {t: s.stats() for t, s in self._services.items()}
+        if self.slo_monitor is not None:
+            out["slo"] = self.slo_monitor.summary()
+        if self.ledger is not None:
+            # Re-priced after the sync above, so the ledger reflects the
+            # end-state plans the other end-state metrics describe.
+            self.ledger.update(self.live_replicas(), now=self._now)
+            out["speedup_ledger"] = self.ledger.summary()
         return out
 
     def close(self) -> None:

@@ -64,6 +64,7 @@ class FleetRequest:
     shed_s: float | None = None      # virtual instant the shed happened
     speculative: bool | None = None  # admit-time spec decision (None: n/a)
     tokens: int = 0
+    generated: list[int] | None = None  # the served token ids, for audits
     exact_share_at_admit: float = 0.0
 
     @property

@@ -45,6 +45,17 @@ generated traffic).
         --engine paged --speculative auto --draft-model self:1 --spec-k 4 \
         --class-mix chat=0.7,bulk=0.3 --requests 24
 
+``--slo`` attaches burn-rate SLO monitors (bare flag: default objectives —
+p95 latency, TTFT, shed rate, deadline hits; or a
+``name:kind:objective[:threshold_ticks]`` spec list): each objective's
+error-budget burn is evaluated every ``--slo-window`` ticks over fast and
+slow windows, alert transitions land in the trace, and active alerts feed
+the autoscaler as scale-up pressure.  ``--prefetch advisor`` replaces
+demand-count prefetch ordering with the closed-loop ranking
+(critical-path seconds x remaining speedup headroom); the summary then
+carries ``slo`` and ``speedup_ledger`` blocks (realized vs attainable
+speedup — the paper's metric, live).  See DESIGN.md §12.
+
 ``--trace-out trace.json`` records every span/event of the run — request
 queue→prefill→decode lifecycles per replica track, engine iterations,
 tuning jobs, router and autoscaler decisions — as a Chrome trace on the
@@ -77,6 +88,29 @@ from repro.models.build import build_model
 from repro.targets import DEFAULT_TARGET, list_targets
 
 
+def _parse_slos(spec: str, tick_s: float):
+    """``--slo`` value -> ``ServingFleet(slos=...)`` argument.
+
+    ``"default"`` passes through; otherwise each comma-separated item is
+    ``name:kind:objective[:threshold_ticks]`` (threshold in ticks, scaled
+    by the fleet's ``tick_s`` so specs are portable across arch sizes).
+    """
+    from repro.obs import SLO
+    if spec == "default":
+        return "default"
+    slos = []
+    for item in spec.split(","):
+        parts = item.strip().split(":")
+        if len(parts) not in (3, 4):
+            raise ValueError(
+                f"bad --slo item {item!r}: name:kind:objective[:ticks]")
+        name, kind, objective = parts[0], parts[1], float(parts[2])
+        threshold = float(parts[3]) * tick_s if len(parts) == 4 else None
+        slos.append(SLO(name=name, kind=kind, objective=objective,
+                        threshold_s=threshold))
+    return slos
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description="serve a request stream across "
                                              "a fleet of engine replicas")
@@ -89,8 +123,11 @@ def main(argv=None) -> dict:
                          "decode step)")
     ap.add_argument("--queue-cap", type=int, default=16,
                     help="admission-queue bound; overflow sheds")
-    ap.add_argument("--prefetch", action="store_true",
-                    help="demand-driven tuning prefetch for hot buckets")
+    ap.add_argument("--prefetch", nargs="?", const="hot", default="off",
+                    choices=["off", "hot", "advisor"],
+                    help="background tuning prefetch: 'hot' (bare flag) "
+                         "orders by bucket demand, 'advisor' by "
+                         "critical-path seconds x speedup headroom")
     ap.add_argument("--engine", choices=["slot", "paged"], default="slot",
                     help="replica engine: fixed decode slots, or paged-KV "
                          "continuous batching with chunked prefill")
@@ -166,6 +203,14 @@ def main(argv=None) -> dict:
                     help="record the generated request trace to this file")
     ap.add_argument("--replay-trace", default="",
                     help="replay a recorded trace instead of generating one")
+    ap.add_argument("--slo", nargs="?", const="default", default="",
+                    help="attach SLO burn-rate monitors: bare flag uses the "
+                         "default objectives (p95 latency, TTFT, shed, "
+                         "deadline); or a spec like "
+                         "'p95:latency:0.95:40,ttft:ttft:0.9:20' — "
+                         "name:kind:objective[:threshold_ticks]")
+    ap.add_argument("--slo-window", type=float, default=4.0,
+                    help="SLO evaluation window, in ticks")
     ap.add_argument("--trace-out", default="",
                     help="write a Perfetto-loadable Chrome trace of the run "
                          "(virtual-clock spans; open at ui.perfetto.dev)")
@@ -221,14 +266,21 @@ def main(argv=None) -> dict:
     from repro.obs.export import write_chrome_trace
 
     tracer = Tracer() if args.trace_out else None
+    prefetch = {"off": False, "hot": True, "advisor": "advisor"}[args.prefetch]
+    slos = None
+    if args.slo:
+        slos = ("default" if args.slo == "default"
+                else (lambda tick_s: _parse_slos(args.slo, tick_s)))
     fleet = ServingFleet(
         cfg, model, params, replicas=args.replicas, slots=args.slots,
         max_len=args.max_len, engine=args.engine, registry=registry,
         policy=args.policy, queue_cap=args.queue_cap,
-        prefetch=args.prefetch, targets=targets,
+        prefetch=prefetch, targets=targets,
         donor_target=args.donor_target, tuning_budget_s=args.tuning_budget_s,
         drain_jobs=args.drain_jobs, seed=args.seed, extras=extras,
-        tracer=tracer, **engine_kw)
+        tracer=tracer, slos=slos, **engine_kw)
+    if slos is not None:
+        fleet.set_slo_window(args.slo_window * fleet.tick_s)
     if args.autoscale:
         fleet.attach_autoscaler(Autoscaler(
             min_replicas=args.min_replicas, max_replicas=args.max_replicas,

@@ -18,7 +18,13 @@ prints the run's story:
 * **speculative acceptance** — draft-token acceptance rate per time slice
   (overall and per request class) with committed-token totals, from the
   engines' ``spec_burst`` events — the panel that shows whether
-  draft-then-verify is paying off and for which traffic.
+  draft-then-verify is paying off and for which traffic;
+* **critical path** — request latency attributed segment by segment
+  (queue / prefill / decode) and cell by cell down to the kernel
+  workloads that ran, from the replicas' ``cell_workloads`` events;
+* **SLO timeline** — burn-rate alert/clear transitions per objective;
+* **speedup ledger** — realized vs attainable speedup over time: how much
+  of the registry's best-known schedules the fleet actually served.
 
     PYTHONPATH=src python -m repro.launch.trace_report trace.json
     PYTHONPATH=src python -m repro.launch.trace_report trace.json --json
@@ -81,6 +87,47 @@ def format_report(summary: dict) -> str:
                          f"{w['bursts']:>4} bursts  "
                          f"accept={w['acceptance']:.2f}  "
                          f"committed={w['committed']}  {cls}")
+    cp = summary.get("critical_path")
+    if cp and cp.get("requests"):
+        seg = cp["segments"]
+        lines.append("critical path (latency attribution):")
+        lines.append(f"  segments: queue={seg['queue']:.6f}s  "
+                     f"prefill={seg['prefill']:.6f}s  "
+                     f"decode={seg['decode']:.6f}s  "
+                     f"(workload-attributed {cp['attributed_frac']:.0%})")
+        cells = sorted(cp["by_cell"].items(),
+                       key=lambda kv: -kv[1]["seconds"])
+        for cell, row in cells[:8]:
+            lines.append(f"  {cell:<16} {row['seconds']:.6f}s  "
+                         f"({row['executions']:.0f} execs)")
+        hot = sorted(cp["by_workload"].items(), key=lambda kv: -kv[1])
+        if hot:
+            lines.append("  hottest workloads:")
+            for key, s in hot[:5]:
+                lines.append(f"    {key}  {s:.6f}s")
+    slo = summary.get("slo", [])
+    if slo:
+        lines.append("slo timeline:")
+        for e in slo:
+            lines.append(f"  t={e['t']:.4f}  {e['name']:<10} "
+                         f"{e.get('slo', '?')}  "
+                         f"burn fast={e.get('burn_fast', 0.0):.2f} "
+                         f"slow={e.get('burn_slow', 0.0):.2f}")
+    ledger = summary.get("speedup_ledger", [])
+    if ledger:
+        last = ledger[-1]
+        lines.append("speedup ledger:")
+        for e in ledger:
+            lines.append(
+                f"  t={e['t']:.4f}  realized {e['realized_speedup']:.3f}x  "
+                f"attainable {e['attainable_speedup']:.3f}x  "
+                f"fraction {e['realized_fraction']:.2f}  "
+                f"tuned {e['tuned_workloads']}/{e['workloads']}")
+        lines.append(
+            f"  final: serving {last['realized_fraction']:.0%} of "
+            f"best-known speedup "
+            f"({last['realized_speedup']:.3f}x of "
+            f"{last['attainable_speedup']:.3f}x attainable)")
     return "\n".join(lines)
 
 

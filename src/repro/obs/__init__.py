@@ -22,12 +22,17 @@ from .export import (
     write_chrome_trace,
     write_jsonl,
 )
+from .slo import KINDS, SLO, SLOMonitor, SLOStatus, default_slos
+from .ledger import LedgerEntry, SpeedupLedger
 from . import report
+from . import profiler
 
 __all__ = [
     "Counter", "CounterGroup", "Gauge", "Histogram", "MetricsRegistry",
     "default_registry", "percentile",
     "NULL_TRACER", "Event", "NullTracer", "Span", "Tracer",
     "chrome_trace", "load_records", "read_jsonl", "write_chrome_trace",
-    "write_jsonl", "report",
+    "write_jsonl", "report", "profiler",
+    "KINDS", "SLO", "SLOMonitor", "SLOStatus", "default_slos",
+    "LedgerEntry", "SpeedupLedger",
 ]

@@ -48,21 +48,27 @@ def chrome_trace(tracer: Tracer) -> dict:
         # sort_index pins the display order to track registration order.
         ev.append({"ph": "M", "pid": 1, "tid": tid,
                    "name": "thread_sort_index", "args": {"sort_index": tid}})
+    # Alongside the standard microsecond ``ts``/``dur``, every record
+    # carries exact-seconds sidecar keys (``ts_s``, and ``t1_s`` for
+    # complete events).  Perfetto ignores unknown keys; ``load_records``
+    # prefers them so a Chrome round-trip folds back to the *same floats*
+    # the JSONL path preserves — the profiler's exact-percentile guarantee
+    # rides on this (seconds x 1e6 / 1e6 is lossy in float64).
     for s in tracer.spans:
         tid = tids.get(s.track, 0)
         if s.cat is not None:
             common = {"pid": 1, "tid": tid, "name": s.name, "cat": s.cat,
                       "id": s.id}
-            ev.append({"ph": "b", "ts": s.t0 * _US, "args": s.attrs,
-                       **common})
-            ev.append({"ph": "e", "ts": s.t1 * _US, **common})
+            ev.append({"ph": "b", "ts": s.t0 * _US, "ts_s": s.t0,
+                       "args": s.attrs, **common})
+            ev.append({"ph": "e", "ts": s.t1 * _US, "ts_s": s.t1, **common})
         else:
             ev.append({"ph": "X", "pid": 1, "tid": tid, "name": s.name,
                        "ts": s.t0 * _US, "dur": (s.t1 - s.t0) * _US,
-                       "args": s.attrs})
+                       "ts_s": s.t0, "t1_s": s.t1, "args": s.attrs})
     for e in tracer.events:
         ev.append({"ph": "i", "pid": 1, "tid": tids.get(e.track, 0),
-                   "name": e.name, "ts": e.t * _US, "s": "t",
+                   "name": e.name, "ts": e.t * _US, "ts_s": e.t, "s": "t",
                    "args": e.attrs})
     # Stable sort: metadata (no ts) first, then by timestamp, preserving
     # record order at equal instants so nesting survives zero-width steps.
@@ -96,6 +102,10 @@ def load_records(path: str) -> list[dict]:
 
     Chrome files are folded back: ``X`` -> span, ``b``/``e`` pairs matched
     by ``(cat, id, name)`` -> async span, ``i`` -> event, metadata dropped.
+    Files written by :func:`chrome_trace` carry exact-seconds sidecar keys
+    (``ts_s``/``t1_s``) which are preferred over dividing the microsecond
+    ``ts`` back down, so both formats fold to identical records; foreign
+    Chrome traces without the sidecars still load (lossily) fine.
     """
     with open(path) as f:
         text = f.read()
@@ -116,16 +126,17 @@ def load_records(path: str) -> list[dict]:
         ph = r.get("ph")
         track = tracks.get(r.get("tid"), "")
         if ph == "X":
-            t0 = r["ts"] / _US
+            t0 = r.get("ts_s", r["ts"] / _US)
+            t1 = r.get("t1_s", t0 + r.get("dur", 0.0) / _US)
             out.append({"kind": "span", "name": r["name"], "track": track,
-                        "t0": t0, "t1": t0 + r.get("dur", 0.0) / _US,
-                        "cat": None, "id": None,
+                        "t0": t0, "t1": t1, "cat": None, "id": None,
                         "attrs": r.get("args", {})})
         elif ph == "b":
             key = (r.get("cat"), r.get("id"), r["name"])
+            t0 = r.get("ts_s", r["ts"] / _US)
             open_async[key] = {"kind": "span", "name": r["name"],
-                               "track": track, "t0": r["ts"] / _US,
-                               "t1": r["ts"] / _US, "cat": r.get("cat"),
+                               "track": track, "t0": t0,
+                               "t1": t0, "cat": r.get("cat"),
                                "id": r.get("id"),
                                "attrs": r.get("args", {})}
             out.append(open_async[key])
@@ -133,8 +144,9 @@ def load_records(path: str) -> list[dict]:
             key = (r.get("cat"), r.get("id"), r["name"])
             rec = open_async.pop(key, None)
             if rec is not None:
-                rec["t1"] = r["ts"] / _US
+                rec["t1"] = r.get("ts_s", r["ts"] / _US)
         elif ph == "i":
             out.append({"kind": "event", "name": r["name"], "track": track,
-                        "t": r["ts"] / _US, "attrs": r.get("args", {})})
+                        "t": r.get("ts_s", r["ts"] / _US),
+                        "attrs": r.get("args", {})})
     return out

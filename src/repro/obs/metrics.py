@@ -34,10 +34,16 @@ def percentile(xs: "list[float]", q: float) -> float:
 
     The one shared definition — fleet metrics, benchmarks, and trace
     reports all quote percentiles through this function, so a p95 printed
-    by any of them is comparable with any other.
+    by any of them is comparable with any other.  Edge cases are pinned
+    (SLO burn-rate math and ledger ratios divide by these): an empty
+    series is 0.0 for every q, and a single sample is that sample for
+    every q — returned directly, bypassing numpy, so the value round-trips
+    bit-exactly rather than through interpolation arithmetic.
     """
     if len(xs) == 0:
         return 0.0
+    if len(xs) == 1:
+        return float(xs[0])
     return float(np.percentile(xs, q))
 
 

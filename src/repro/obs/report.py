@@ -155,10 +155,45 @@ def acceptance_timeline(records: "list[dict]", windows: int = 8) -> list[dict]:
     return out
 
 
+def slo_timeline(records: "list[dict]") -> list[dict]:
+    """SLO alert transitions from the ``slo`` track, in order.
+
+    Each row is an ``slo_alert`` or ``slo_clear`` event with the window's
+    fast/slow burn rates — the audit trail of when each objective's error
+    budget started and stopped burning.
+    """
+    out = [{"t": r["t"], "name": r["name"], **r["attrs"]}
+           for r in records if r["kind"] == "event"
+           and r["track"] == "slo"
+           and r["name"] in ("slo_alert", "slo_clear")]
+    out.sort(key=lambda r: (r["t"], r.get("slo", "")))
+    return out
+
+
+def ledger_timeline(records: "list[dict]") -> list[dict]:
+    """Speedup-ledger snapshots (``ledger`` events) over time.
+
+    The realized-vs-attainable speedup curve: each row shows how much of
+    the registry's best-known speedup the fleet was actually serving at
+    that instant — the live form of the paper's headline metric.
+    """
+    out = [{"t": r["t"], **r["attrs"]}
+           for r in records if r["kind"] == "event"
+           and r["name"] == "ledger"]
+    out.sort(key=lambda r: r["t"])
+    return out
+
+
 def summarize(records: "list[dict]", windows: int = 8) -> dict:
     """Everything the CLI prints, as one JSON-ready object."""
+    # Imported lazily: profiler builds on request_table above, so a
+    # module-level import would be circular.
+    from . import profiler
     return {"latency": latency_breakdown(records),
             "tier_shares": tier_shares(records, windows),
             "tuning_jobs": tuning_jobs(records),
             "scale_timeline": scale_timeline(records),
-            "acceptance": acceptance_timeline(records, windows)}
+            "acceptance": acceptance_timeline(records, windows),
+            "slo": slo_timeline(records),
+            "speedup_ledger": ledger_timeline(records),
+            "critical_path": profiler.critical_path(records)}

@@ -66,6 +66,9 @@ class _Job:
     started: bool = False
     priority: float = 0.0          # higher drains first (deferred mode)
     seq: int = 0                   # FIFO tiebreak within a priority
+    enqueued_t: float = 0.0        # virtual instant the job entered the queue
+    skips: int = 0                 # times a later-enqueued job was claimed first
+    starved: bool = False          # skips crossed the starvation threshold
 
 
 class TuningService:
@@ -89,6 +92,12 @@ class TuningService:
     with every donor re-validated under ``target``'s spec before it can win.
     """
 
+    #: A queued job passed over by this many later-enqueued, higher-priority
+    #: claims is counted as starved (once) — the telemetry that verifies a
+    #: priority source (demand counts, the TuningAdvisor) is not freezing
+    #: out cold workloads indefinitely.
+    STARVATION_SKIPS = 8
+
     def __init__(self, registry, *, model_id: str = "serving",
                  runner: MeasureRunner | None = None, mode: str = "strict",
                  seed: int = 0, noise_sigma: float = 0.05,
@@ -96,7 +105,8 @@ class TuningService:
                  budget_s: float = float("inf"), max_workers: int = 2,
                  probe_candidates: int | None = 4,
                  target=None, donor_target=None,
-                 metrics: MetricsRegistry | None = None, tracer=None):
+                 metrics: MetricsRegistry | None = None, tracer=None,
+                 clock=None):
         self.registry = registry
         self.model_id = model_id
         self.runner, self.target = resolve_runner(runner, target)
@@ -131,17 +141,27 @@ class TuningService:
         # ``_lock`` exactly as the plain-dict versions were.
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # Queue ages are measured on the owner's clock: fleets pass their
+        # virtual ``_now``; the default rides the tracer's bound clock
+        # (0.0 under NULL_TRACER — ages degrade to 0, never crash).
+        self._clock = clock if clock is not None else self.tracer.now
         self.trace_track = f"tuning/{self.target}"
         self._counters = self.metrics.group(f"tuning.{self.target}", [
             "lookups", "exact_hits", "transfer_hits", "default_misses",
             "jobs_enqueued", "jobs_deduped", "jobs_rejected_budget",
             "jobs_completed", "jobs_failed", "upgrades", "publish_skipped",
-            "prefetches", "jobs_cancelled"])
+            "prefetches", "jobs_cancelled", "jobs_starved"])
         self._job_hist = self.metrics.histogram(
             f"tuning.{self.target}.job_search_s")
+        self._queue_age_g = self.metrics.gauge(
+            f"tuning.{self.target}.queue_age_mean_s")
+        self._oldest_age_g = self.metrics.gauge(
+            f"tuning.{self.target}.oldest_unstarted_age_s")
 
     # -- lookup ---------------------------------------------------------------
-    def _donor_models(self, db: ScheduleDB) -> list[str]:
+    def donor_models(self, db: ScheduleDB) -> list[str]:
+        """Donor model ids the transfer tier and background jobs pool over
+        (also what the TuningAdvisor estimates class headroom from)."""
         if self.donors is not None:
             return list(self.donors)
         return [m for m in db.models(target=self.donor_target)
@@ -187,7 +207,7 @@ class TuningService:
         candidates: list[Record] = []
         if self.probe_candidates != 0:
             candidates = db.by_class(instance.class_id,
-                                     models=self._donor_models(db),
+                                     models=self.donor_models(db),
                                      target=self.donor_target)
             if (self.probe_candidates is not None
                     and len(candidates) > self.probe_candidates):
@@ -250,7 +270,8 @@ class TuningService:
                 self._counters["jobs_rejected_budget"] += 1
                 return False
             self._job_seq += 1
-            job = _Job(instance, priority=priority, seq=self._job_seq)
+            job = _Job(instance, priority=priority, seq=self._job_seq,
+                       enqueued_t=self._clock())
             self._jobs[key] = job
             self._counters["jobs_enqueued"] += 1
             if self.tracer.enabled:
@@ -279,6 +300,14 @@ class TuningService:
         with self._lock:
             self._counters["prefetches"] += 1
         return self._enqueue(instance, priority=priority)
+
+    def attempted(self, key: str) -> bool:
+        """Whether a background job for this workload key already ran
+        (whether or not it published).  Advisors treat attempted workloads
+        as exhausted: re-running the same deterministic search cannot find
+        a different answer, so their priority budget goes elsewhere."""
+        with self._lock:
+            return key in self._attempted
 
     def pending_jobs(self) -> list[str]:
         """Workload keys awaiting background tuning, in deferred-drain order
@@ -320,6 +349,21 @@ class TuningService:
                 best = cand
         return best[2] if best is not None else None
 
+    def _note_claim_locked(self, winner: _Job) -> None:
+        """Starvation accounting for one claim.  Caller holds ``_lock``.
+
+        Every still-unstarted job that was enqueued *before* the claimed one
+        was just passed over by a higher-priority claim; a job passed over
+        more than :data:`STARVATION_SKIPS` times counts as starved (once).
+        """
+        for j in self._jobs.values():
+            if j.started or j is winner or j.seq >= winner.seq:
+                continue
+            j.skips += 1
+            if j.skips > self.STARVATION_SKIPS and not j.starved:
+                j.starved = True
+                self._counters["jobs_starved"] += 1
+
     def _run_job(self, key: str | None = None) -> bool:
         """Transfer-tune one missed workload and publish an upgrade.
 
@@ -342,6 +386,7 @@ class TuningService:
                 self._jobs.pop(key, None)
                 return False
             job.started = True
+            self._note_claim_locked(job)
         instance = job.instance
         claim_t = self.tracer.now() if self.tracer.enabled else 0.0
         try:
@@ -349,7 +394,7 @@ class TuningService:
             db = snap.db(None)
             res = transfer_tune(
                 [KernelUse(instance)], db, model_id=self.model_id,
-                donors=self._donor_models(db), mode=self.mode, seed=self.seed,
+                donors=self.donor_models(db), mode=self.mode, seed=self.seed,
                 noise_sigma=self.noise_sigma, runner=self.runner,
                 target=self.target, donor_target=self.donor_target)
             with self._lock:
@@ -492,12 +537,28 @@ class TuningService:
 
     # -- telemetry ------------------------------------------------------------
     def stats(self) -> dict:
+        now = self._clock()
         with self._lock:
             out = dict(self._counters)
             out["in_flight"] = len(self._jobs)
             out["search_seconds_spent"] = self._spent_s
             out["probe_search_s"] = self._probe_s
             out["budget_s"] = self.budget_s
+            # Queue health: how long unstarted work has been waiting, and
+            # the per-job view (age / skips / starved) for the starvation
+            # audit the advisor's priority ordering is checked against.
+            unstarted = [j for j in self._jobs.values() if not j.started]
+            ages = [max(0.0, now - j.enqueued_t) for j in unstarted]
+            out["queue_depth_unstarted"] = len(unstarted)
+            out["queue_age_mean_s"] = sum(ages) / len(ages) if ages else 0.0
+            out["oldest_unstarted_age_s"] = max(ages, default=0.0)
+            out["queue_jobs"] = sorted(
+                ({"key": j.instance.workload_key(), "priority": j.priority,
+                  "age_s": max(0.0, now - j.enqueued_t), "skips": j.skips,
+                  "starved": j.starved} for j in unstarted),
+                key=lambda r: -r["age_s"])
+        self._queue_age_g.sample(out["queue_age_mean_s"], now)
+        self._oldest_age_g.sample(out["oldest_unstarted_age_s"], now)
         out["generation"] = self.registry.generation
         out["target"] = self.target
         out["donor_target"] = self.donor_target

@@ -88,6 +88,35 @@ def test_percentile_is_shared_single_implementation():
     assert percentile([], 95) == 0.0
 
 
+def test_percentile_edge_cases_pinned():
+    """Empty and single-sample series are pinned (SLO burn math and ledger
+    ratios divide by these): empty -> 0.0 for every q, one sample -> that
+    sample bit-exactly, bypassing interpolation arithmetic."""
+    for q in (0, 50, 95, 99, 100):
+        assert percentile([], q) == 0.0
+    v = 0.1 + 0.2                      # not representable as exactly 0.3
+    for q in (0, 37.5, 50, 95, 100):
+        assert percentile([v], q) == v
+    h = MetricsRegistry().histogram("h")
+    assert h.percentile(95) == 0.0
+    h.observe(v)
+    assert h.percentile(5) == v and h.percentile(95) == v
+
+
+def test_gauge_values_window_boundaries():
+    """``values(t0, t1)`` is half-open [t0, t1): a sample landing exactly on
+    a window boundary belongs to the later window, never to both — the
+    invariant that makes adjacent autoscaler windows partition a run."""
+    g = MetricsRegistry().gauge("g")
+    for t in (0.0, 1.0, 2.0):
+        g.sample(t * 10, t)
+    assert g.values(0.0, 1.0) == [0.0]
+    assert g.values(1.0, 2.0) == [10.0]
+    assert g.values(0.0, 2.0) + g.values(2.0, 4.0) == g.values()
+    assert g.values(2.0, 2.0) == []
+    assert g.values(t1=1.0) == [0.0]   # open start defaults to -inf
+
+
 # ---------------------------------------------------------------------------
 # Tracer invariants
 # ---------------------------------------------------------------------------
@@ -178,6 +207,36 @@ def test_jsonl_roundtrip_matches_chrome(tmp_path):
     for ra, rb in zip(a, b):
         assert ra["kind"] == rb["kind"] and ra["name"] == rb["name"]
         assert ra["attrs"] == rb["attrs"]
+
+
+def test_load_records_bitexact_across_formats(tmp_path):
+    """The two export formats fold back to *identical* records — floats
+    included.  The Chrome file's exact-seconds sidecar keys (``ts_s`` /
+    ``t1_s``) make the microsecond ``ts`` rounding irrelevant, which is what
+    lets the critical-path profiler reproduce FleetMetrics' percentiles from
+    either file."""
+    tr = Tracer(clock=lambda: 0.0)
+    t0, t1 = 1.0 / 3.0, 0.1 + 0.2          # awkward after a x1e6 round-trip
+    p = tr.add_span("step", "replica-0", t0, 7 * t1, n=2)
+    tr.add_span("verify", "replica-0", 2 * t0, 5 * t1, parent=p)
+    tr.add_async_span("request", "replica-0", t0, 6 * t1, "request", "1",
+                      uid=1, latency_s=6 * t1 - t0)
+    tr.event("cell_workloads", "replica-0", t=t0, cell="verify",
+             workloads=[["wk", 0.1]])
+    ch, jl = str(tmp_path / "t.json"), str(tmp_path / "t.jsonl")
+    write_chrome_trace(ch, tr)
+    write_jsonl(jl, tr)
+
+    def key(r):
+        return json.dumps(r, sort_keys=True)
+
+    a = sorted(load_records(ch), key=key)
+    b = sorted(load_records(jl), key=key)
+    assert a == b                           # full records, bit-exact
+    v = next(r for r in a if r["kind"] == "span" and r["name"] == "verify")
+    assert v["t0"] == 2 * t0 and v["t1"] == 5 * t1
+    req = next(r for r in a if r.get("cat") == "request")
+    assert req["attrs"]["latency_s"] == 6 * t1 - t0
 
 
 # ---------------------------------------------------------------------------

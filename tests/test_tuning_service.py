@@ -248,3 +248,60 @@ def test_threaded_pool_claims_highest_priority_first(registry):
     keys = [a.workload_key(), b.workload_key(), c.workload_key()]
     order = [k for k in svc.completed_order if k in keys]
     assert order == [keys[2], keys[0], keys[1]]
+
+
+# ---------------------------------------------------------------------------
+# Queue health telemetry (stats) and starvation accounting
+# ---------------------------------------------------------------------------
+
+
+def test_stats_queue_health_uses_owner_clock(registry):
+    """Queue ages are measured on the owner's clock (fleets pass their
+    virtual now), surfaced in stats() and sampled into registry gauges."""
+    t = {"v": 0.0}
+    svc = make_service(registry, probe_candidates=0, clock=lambda: t["v"])
+    a = KernelInstance.make("matmul", M=192, N=192, K=192)
+    b = KernelInstance.make("matmul", M=224, N=224, K=224)
+    assert svc.prefetch(a, priority=0.0)
+    t["v"] = 5.0
+    assert svc.prefetch(b, priority=1.0)
+    t["v"] = 9.0
+    s = svc.stats()
+    assert s["queue_depth_unstarted"] == 2
+    assert s["queue_age_mean_s"] == pytest.approx((9.0 + 4.0) / 2)
+    assert s["oldest_unstarted_age_s"] == pytest.approx(9.0)
+    rows = s["queue_jobs"]                    # oldest first
+    assert [r["key"] for r in rows] == [a.workload_key(), b.workload_key()]
+    assert rows[0]["age_s"] == pytest.approx(9.0)
+    assert rows[1]["priority"] == 1.0
+    assert not rows[0]["starved"] and rows[0]["skips"] == 0
+    g = svc.metrics.get(f"tuning.{svc.target}.queue_age_mean_s")
+    assert g.samples[-1] == (9.0, pytest.approx(6.5))
+    g2 = svc.metrics.get(f"tuning.{svc.target}.oldest_unstarted_age_s")
+    assert g2.samples[-1][1] == pytest.approx(9.0)
+
+    svc.drain()
+    s2 = svc.stats()
+    assert s2["queue_depth_unstarted"] == 0
+    assert s2["queue_age_mean_s"] == 0.0 and s2["queue_jobs"] == []
+    svc.close()
+
+
+def test_starvation_accounting_marks_passed_over_jobs(registry):
+    """A low-priority job passed over more than STARVATION_SKIPS times by
+    higher-priority claims is counted starved exactly once — the audit the
+    advisor's anti-starvation headroom floor is checked against."""
+    svc = make_service(registry, probe_candidates=0, clock=lambda: 0.0)
+    low = KernelInstance.make("matmul", M=176, N=176, K=176)
+    assert svc.prefetch(low, priority=0.0)
+    for i in range(TuningService.STARVATION_SKIPS + 1):
+        size = 320 + 32 * i
+        hot = KernelInstance.make("matmul", M=size, N=size, K=size)
+        assert svc.prefetch(hot, priority=10.0)
+        assert svc.drain(max_jobs=1) == 1     # claims hot, passes over low
+    s = svc.stats()
+    row = next(r for r in s["queue_jobs"] if r["key"] == low.workload_key())
+    assert row["skips"] == TuningService.STARVATION_SKIPS + 1
+    assert row["starved"] is True
+    assert s["jobs_starved"] == 1             # counted once, not per skip
+    svc.close()
